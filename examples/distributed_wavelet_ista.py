@@ -1,0 +1,92 @@
+"""Fully-distributed SGWT wavelet denoising (paper Sec. V-C) on a device
+mesh: every ISTA iteration runs the forward transform W~ (Algorithm 1,
+Sec. IV-A) and the adjoint W~* (Sec. IV-B) through halo exchanges only —
+the complete communication pattern the paper proposes, end to end.
+
+Verifies against the centralized solver and reports the Sec. V-C
+communication accounting (2M|E| length-1 + 2M|E| length-eta words/iter).
+
+Run:  PYTHONPATH=src python examples/distributed_wavelet_ista.py
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.apps import wavelet_denoise_ista  # noqa: E402
+from repro.core import graph, multipliers  # noqa: E402
+from repro.core.distributed import (  # noqa: E402
+    DistributedGraphContext, build_partition_plan)
+from repro.core.operators import UnionFilterOperator  # noqa: E402
+
+
+def main() -> None:
+    n_dev = len(jax.devices())
+    assert n_dev == 8
+    mesh = jax.make_mesh((n_dev,), ("graph",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    key = jax.random.PRNGKey(21)
+    kg, kn = jax.random.split(key)
+    g = graph.connected_sensor_graph(kg, n=500)
+    f0 = g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2 - 1.0
+    y = f0 + 0.5 * jax.random.normal(kn, f0.shape)
+    lmax = float(g.lmax_bound())
+
+    n_scales, order, n_iters, mu = 3, 20, 30, 2.0
+    bank = multipliers.sgwt_filter_bank(lmax, n_scales=n_scales)
+    op = UnionFilterOperator.from_multipliers(bank, order, lmax)
+    step = 1.0 / op.operator_norm_bound()
+    mu_vec = jnp.concatenate([jnp.zeros((1,)),
+                              jnp.full((op.eta - 1,), mu)])
+    thresh = (mu_vec * step)[:, None, None]
+
+    plan = build_partition_plan(g.adjacency, g.coords, n_dev)
+    ctx = DistributedGraphContext(plan=plan, mesh=mesh, axis="graph")
+    y_sh = ctx.scatter_signal(y)
+
+    def soft(z):
+        return jnp.sign(z) * jnp.maximum(jnp.abs(z) - thresh, 0.0)
+
+    # ---- distributed ISTA: a^{k} = S(a + step * W~(y - W~* a)) ----
+    a = ctx.cheb_apply(y_sh, op.coeffs, lmax)          # warm start W~ y
+    for _ in range(n_iters):
+        resid = y_sh - ctx.cheb_adjoint(a, op.coeffs, lmax)
+        a = soft(a + step * ctx.cheb_apply(resid, op.coeffs, lmax))
+    fhat_sh = ctx.cheb_adjoint(a, op.coeffs, lmax)
+    fhat = ctx.gather_signal(fhat_sh[None])[0, :, 0]
+
+    # ---- centralized reference (identical math) ----
+    lap = g.laplacian()
+    fref, aref = wavelet_denoise_ista(
+        lambda v: lap @ v, y, lmax, n_scales=n_scales, order=order,
+        mu=mu, n_iters=n_iters)
+
+    dev = float(np.max(np.abs(fhat - np.asarray(fref))))
+    noisy = float(jnp.mean((y - f0) ** 2))
+    den = float(np.mean((fhat - np.asarray(f0)) ** 2))
+    spars = float(jnp.mean(a == 0.0))
+    e, eta = g.n_edges, op.eta
+    words = 2 * order * e * eta + 2 * order * e  # Sec. V-C per iteration
+
+    print(f"graph N={g.n_vertices} |E|={e}  eta={eta} M={order}")
+    print(f"max |distributed - centralized| = {dev:.2e}")
+    print(f"noisy MSE = {noisy:.4f}  denoised MSE = {den:.4f}  "
+          f"sparsity = {spars:.2f}")
+    print(f"paper words/ISTA-iter (radio model) = {words}  "
+          f"(scales with |E|, independent of N — the Sec. V-C claim)")
+    assert dev < 1e-3, dev
+    assert den < 0.3 * noisy
+    assert spars > 0.2
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

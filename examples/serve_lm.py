@@ -1,0 +1,49 @@
+"""Batched serving example: prefill + decode through the ServeEngine with
+slot reuse, greedy and sampled generation, on a reduced Gemma-2 config.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.models import lm
+from repro.models.config import ParallelConfig
+from repro.serve import ServeEngine
+
+
+def main() -> None:
+    cfg = registry.get_smoke("gemma2_2b")
+    params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+    par = ParallelConfig(attn_impl="naive", remat="none")
+
+    engine = ServeEngine(cfg=cfg, par=par, params=params, s_max=64,
+                         temperature=0.0)
+
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab_size, size=(4, 8)).astype(np.int32)
+
+    t0 = time.monotonic()
+    out_greedy = engine.generate(prompts, max_new_tokens=16)
+    t1 = time.monotonic()
+    print(f"greedy batch=4 x 16 tokens in {t1 - t0:.1f}s "
+          f"(incl. compile)")
+    print("greedy tokens:\n", out_greedy)
+
+    # determinism check
+    again = engine.generate(prompts, max_new_tokens=16)
+    assert (out_greedy == again).all(), "greedy decode must be deterministic"
+
+    sampled = ServeEngine(cfg=cfg, par=par, params=params, s_max=64,
+                          temperature=1.0)
+    out_s = sampled.generate(prompts, max_new_tokens=16, seed=7)
+    print("sampled tokens:\n", out_s)
+    assert out_s.shape == (4, 16)
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,92 @@
+"""End-to-end training driver: train a ~100M-parameter LM with the full
+substrate — deterministic data pipeline, AdamW, async checkpointing,
+restart-on-failure — and report the loss curve.
+
+The default preset is sized for this CPU container (~10M params, 120
+steps, a few minutes). ``--preset 100m`` trains the deliverable-scale
+~100M model for 300 steps (hours on CPU; minutes on one TPU host).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--preset 100m]
+"""
+
+import argparse
+import json
+import tempfile
+
+import jax
+
+from repro.checkpoint import CheckpointManager, latest_step, restore
+from repro.data import SyntheticTokenPipeline
+from repro.models import lm
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.optim import AdamWConfig, init_opt_state
+from repro.runtime import run_with_restarts
+from repro.train import Trainer, make_train_step
+
+PRESETS = {
+    # ~10M params: CPU-friendly end-to-end check
+    "small": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
+                  d_ff=1024, vocab_size=2048, steps=120, batch=8, seq=128),
+    # ~100M params: the deliverable-scale driver
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=3072, vocab_size=32768, steps=300, batch=16, seq=256),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
+    ap.add_argument("--steps", type=int, default=0)
+    args = ap.parse_args()
+    p = PRESETS[args.preset]
+    steps = args.steps or p["steps"]
+
+    cfg = ModelConfig(
+        name=f"lm-{args.preset}", family="dense",
+        n_layers=p["n_layers"], d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"],
+        vocab_size=p["vocab_size"], pattern=("attn",),
+        ffn_pattern=("dense",), act="swiglu")
+    n_params = sum(x.size for x in jax.tree.leaves(
+        lm.init(jax.random.PRNGKey(0), cfg)[0]))
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  steps={steps}")
+
+    par = ParallelConfig(attn_impl="naive", remat="none")
+    optc = AdamWConfig(peak_lr=3e-3, warmup_steps=steps // 10,
+                       total_steps=steps)
+    pipe = SyntheticTokenPipeline(cfg.vocab_size, p["seq"], p["batch"])
+    ckpt_dir = tempfile.mkdtemp(prefix="repro_train_")
+    mgr = CheckpointManager(ckpt_dir, keep=2)
+    step_fn = jax.jit(make_train_step(cfg, par, optc))
+
+    def make_trainer(start_step):
+        params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+        opt = init_opt_state(params, optc)
+        if start_step:
+            snap = restore(ckpt_dir, start_step,
+                           {"params": params, "opt": opt})
+            params, opt = snap["params"], snap["opt"]
+        return Trainer(train_step=step_fn, pipeline=pipe, ckpt=mgr,
+                       params=params, opt_state=opt, ckpt_every=50)
+
+    result = run_with_restarts(
+        make_trainer, steps, latest_step_fn=lambda: latest_step(ckpt_dir))
+    losses = result["losses"]
+    first = sum(losses[:10]) / len(losses[:10])
+    last = sum(losses[-10:]) / len(losses[-10:])
+    print(json.dumps({
+        "steps": result["final_step"],
+        "loss_first10": round(first, 4),
+        "loss_last10": round(last, 4),
+        "wall_s": round(result["wall_s"], 1),
+        "tokens_per_s": round(
+            result["final_step"] * p["batch"] * p["seq"]
+            / result["wall_s"], 1),
+        "ckpt_dir": ckpt_dir,
+    }, indent=1))
+    assert last < first - 0.3, "loss should decrease measurably"
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Paper Sec. V application examples built on the core operator engine."""
+
+from repro.apps.denoising import (
+    denoise_tikhonov,
+    smooth_heat,
+    ssl_classify,
+    wavelet_denoise_ista,
+)
+
+__all__ = [
+    "denoise_tikhonov",
+    "smooth_heat",
+    "ssl_classify",
+    "wavelet_denoise_ista",
+]

@@ -1,0 +1,10 @@
+from repro.checkpoint.store import (
+    CheckpointManager,
+    latest_step,
+    restore,
+    restore_resharded,
+    save,
+)
+
+__all__ = ["CheckpointManager", "latest_step", "restore",
+           "restore_resharded", "save"]

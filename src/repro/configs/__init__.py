@@ -1,0 +1,5 @@
+"""Assigned-architecture configs (exact published numbers) + smoke variants."""
+
+from repro.configs.registry import ARCH_IDS, available, get, get_smoke
+
+__all__ = ["ARCH_IDS", "available", "get", "get_smoke"]

@@ -1,0 +1,57 @@
+"""The paper's primary contribution: Chebyshev-approximated unions of graph
+Fourier multiplier operators — centralized, distributed (halo exchange on a
+device mesh), and as Chebyshev-gossip consensus on the interconnect graph."""
+
+from repro.core.chebyshev import (
+    cheb_adjoint_apply,
+    cheb_apply,
+    cheb_apply_dense,
+    cheb_coefficients,
+    cheb_eval,
+    gram_coefficients,
+    product_coefficients,
+)
+from repro.core.graph import (
+    SensorGraph,
+    connected_sensor_graph,
+    gaussian_kernel_weights,
+    grid_graph,
+    is_connected,
+    laplacian,
+    lmax_power_iteration,
+    lmax_upper_bound,
+    random_sensor_graph,
+    ring_graph,
+    spatial_partition_order,
+    torus_graph,
+)
+from repro.core.operators import (
+    UnionFilterOperator,
+    exact_multiplier_matrix,
+    exact_union_apply,
+)
+
+__all__ = [
+    "SensorGraph",
+    "UnionFilterOperator",
+    "cheb_adjoint_apply",
+    "cheb_apply",
+    "cheb_apply_dense",
+    "cheb_coefficients",
+    "cheb_eval",
+    "connected_sensor_graph",
+    "exact_multiplier_matrix",
+    "exact_union_apply",
+    "gaussian_kernel_weights",
+    "gram_coefficients",
+    "grid_graph",
+    "is_connected",
+    "laplacian",
+    "lmax_power_iteration",
+    "lmax_upper_bound",
+    "product_coefficients",
+    "random_sensor_graph",
+    "ring_graph",
+    "spatial_partition_order",
+    "torus_graph",
+]

@@ -1,0 +1,217 @@
+"""Chebyshev-accelerated gossip consensus on the device-interconnect graph.
+
+This is the paper's technique turned inward on the training cluster itself:
+the "sensor network" is the ICI ring/torus of TPU chips, the "signal" is a
+gradient (one full copy per data-parallel replica), and the operator being
+applied distributively is the *consensus projection* — the graph Fourier
+multiplier ``g(lambda) = 1{lambda = 0}`` that keeps only the
+constant-eigenvector component (the mean).
+
+A degree-M polynomial cannot represent the indicator exactly; the minimax
+choice on a spectrum contained in ``[lam1, lmax]`` is the scaled Chebyshev
+
+    p_M(x) = T_M((lmax + lam1 - 2 x) / (lmax - lam1)) / T_M(t0),
+    t0 = (lmax + lam1) / (lam1 - lmax) -> evaluated at x = 0,
+
+which satisfies ``p_M(0) = 1`` (mean preserved exactly) and
+``|p_M(x)| <= 1 / T_M((lmax + lam1) / (lmax - lam1))`` for
+``x in [lam1, lmax]`` — the non-consensus energy contracts by that factor
+per application. This is the classical Chebyshev acceleration of gossip
+(cf. Scaman et al. 2017), here implemented through the paper's own
+machinery: coefficients via eq. (8) quadrature, application via the eq. (9)
+recurrence with the matvec realised as ``lax.ppermute`` neighbour exchanges
+(Algorithm 1 with radio messages replaced by ICI hops).
+
+Why do this instead of ``psum``? The byte count is higher (each round moves
+full vectors, vs 2 (P-1)/P ring segments for all-reduce), but every round is
+a *neighbour-only, contention-free* exchange: no global synchronisation
+chain, graceful behaviour under stragglers (truncating M rounds yields a
+usable, slightly-biased mean — the paper's Sec. VI robustness agenda), and
+the schedule overlaps with compute. §Perf quantifies both sides.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chebyshev
+
+__all__ = [
+    "ring_spectrum_bounds",
+    "consensus_coefficients",
+    "consensus_contraction",
+    "required_order",
+    "ring_laplacian_matvec",
+    "chebyshev_gossip_mean",
+    "pair_allreduce_mean",
+]
+
+
+def ring_spectrum_bounds(p: int) -> tuple[float, float]:
+    """(lam1, lmax) of the unit-weight ring C_p Laplacian.
+
+    Eigenvalues are ``2 - 2 cos(2 pi k / p)``; lam1 is the spectral gap
+    (Fiedler value), lmax = 4 for even p.
+    """
+    if p < 2:
+        raise ValueError("ring needs >= 2 devices")
+    lam1 = 2.0 - 2.0 * math.cos(2.0 * math.pi / p)
+    kmax = p // 2
+    lmax = 2.0 - 2.0 * math.cos(2.0 * math.pi * kmax / p)
+    return lam1, lmax
+
+
+def consensus_contraction(order: int, lam1: float, lmax: float) -> float:
+    """Per-application contraction of non-consensus components: 1/T_M(t0)."""
+    if lmax - lam1 < 1e-12:
+        # degenerate spectrum (e.g. C_3: {0, 3, 3}): p(x) = 1 - x/lam1 is
+        # exact consensus in one round.
+        return 0.0
+    t0 = (lmax + lam1) / (lmax - lam1)
+    # T_M(t0) = cosh(M * arccosh(t0)) for t0 > 1.
+    return 1.0 / math.cosh(order * math.acosh(t0))
+
+
+def required_order(p: int, eps: float) -> int:
+    """Smallest M with contraction <= eps on a ring of p devices.
+
+    Scales as ~ sqrt(1/gap) * log(1/eps) ~ O(p log(1/eps)) on a ring —
+    vs O(p / gap) = O(p^2) rounds for unaccelerated gossip.
+    """
+    lam1, lmax = ring_spectrum_bounds(p)
+    for m in range(1, 64 * p):
+        if consensus_contraction(m, lam1, lmax) <= eps:
+            return m
+    raise RuntimeError("did not reach eps")
+
+
+def consensus_coefficients(order: int, lam1: float, lmax: float) -> np.ndarray:
+    """Shifted-Chebyshev (paper eq. 8) coefficients of the minimax
+    consensus polynomial p_M on [0, lmax].
+
+    p_M is a degree-``order`` polynomial, so quadrature with enough nodes
+    recovers its (M+1) shifted-basis coefficients exactly; the paper's
+    recurrence then applies it with M neighbour exchanges.
+    """
+    if lmax - lam1 < 1e-12:
+        return chebyshev.cheb_coefficients(
+            [lambda x: 1.0 - np.asarray(x, dtype=np.float64) / lam1],
+            order, lmax, quad_points=max(4 * (order + 1), 256))
+    t0 = (lmax + lam1) / (lmax - lam1)
+
+    def cheb_t(m: int, x: np.ndarray) -> np.ndarray:
+        # Numerically stable T_m for |x| possibly > 1.
+        out = np.where(
+            np.abs(x) <= 1.0,
+            np.cos(m * np.arccos(np.clip(x, -1.0, 1.0))),
+            np.cosh(m * np.arccosh(np.maximum(np.abs(x), 1.0))) * np.sign(x) ** m,
+        )
+        return out
+
+    denom = math.cosh(order * math.acosh(t0))
+
+    def p_m(x):
+        y = (lmax + lam1 - 2.0 * np.asarray(x, dtype=np.float64)) / (lmax - lam1)
+        return cheb_t(order, y) / denom
+
+    return chebyshev.cheb_coefficients(
+        [p_m], order, lmax, quad_points=max(4 * (order + 1), 256)
+    )
+
+
+def ring_laplacian_matvec(tree: Any, axis_name: str, axis_size: int) -> Any:
+    """Ring-Laplacian matvec on a pytree living one-copy-per-device.
+
+    L x = 2 x - x_left - x_right, realised with two ``ppermute`` neighbour
+    hops along ``axis_name`` (ICI-local on a TPU torus axis).
+    """
+    fwd = [(i, (i + 1) % axis_size) for i in range(axis_size)]
+    bwd = [((i + 1) % axis_size, i) for i in range(axis_size)]
+
+    def leaf(v):
+        left = jax.lax.ppermute(v, axis_name, fwd)
+        right = jax.lax.ppermute(v, axis_name, bwd)
+        return 2.0 * v - left - right
+
+    return jax.tree_util.tree_map(leaf, tree)
+
+
+def chebyshev_gossip_mean(
+    tree: Any,
+    axis_name: str,
+    axis_size: int,
+    *,
+    order: int | None = None,
+    eps: float = 1e-3,
+) -> Any:
+    """Approximate the across-device mean of ``tree`` by Chebyshev gossip.
+
+    Must be called inside a ``shard_map``/``pmap`` region where
+    ``axis_name`` is bound. ``order`` defaults to the smallest M achieving
+    ``eps`` contraction of non-consensus energy.
+
+    Returns a pytree of the same structure whose value on every device is
+    within ``eps * ||disagreement||`` of the exact mean.
+    """
+    if axis_size == 1:
+        return tree
+    if order is None:
+        order = required_order(axis_size, eps)
+    lam1, lmax = ring_spectrum_bounds(axis_size)
+    coeffs = consensus_coefficients(order, lam1, lmax)[0]
+
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    dtype = leaves[0].dtype
+    c = jnp.asarray(coeffs, dtype=dtype)
+    alpha = jnp.asarray(lmax / 2.0, dtype=dtype)
+
+    mv = partial(ring_laplacian_matvec, axis_name=axis_name, axis_size=axis_size)
+
+    def axpy(a, x, b, y):  # a*x + b*y, leafwise
+        return [a * xi + b * yi for xi, yi in zip(x, y)]
+
+    t0 = leaves
+    l_t0 = mv(t0)
+    t1 = [(lv - alpha * v) / alpha for lv, v in zip(l_t0, t0)]
+    acc = axpy(0.5 * c[0], t0, c[1], t1)
+
+    if len(coeffs) > 2:
+
+        def step(carry, ck):
+            t_prev1, t_prev2, acc = carry
+            l_t = mv(t_prev1)
+            t_k = [
+                (2.0 / alpha) * (lv - alpha * v) - v2
+                for lv, v, v2 in zip(l_t, t_prev1, t_prev2)
+            ]
+            acc = [a + ck * t for a, t in zip(acc, t_k)]
+            return (t_k, t_prev1, acc), None
+
+        (_, _, acc), _ = jax.lax.scan(step, (t1, t0, acc), c[2:])
+
+    return jax.tree_util.tree_unflatten(treedef, acc)
+
+
+def pair_allreduce_mean(tree: Any, axis_name: str) -> Any:
+    """Exact mean over a 2-device axis with one neighbour exchange —
+    used for the cross-pod level of hierarchical sync."""
+    return jax.tree_util.tree_map(
+        lambda v: jax.lax.pmean(v, axis_name), tree
+    )
+
+
+def gossip_message_words(order: int, axis_size: int, n_params: int) -> int:
+    """Scalar words moved per sync across all devices: each of the M orders
+    exchanges the full vector with both ring neighbours (2 sends/device)."""
+    return order * 2 * axis_size * n_params
+
+
+def allreduce_message_words(axis_size: int, n_params: int) -> int:
+    """Ring all-reduce reference: 2 (P-1)/P * n per device."""
+    return int(2 * (axis_size - 1) * n_params)

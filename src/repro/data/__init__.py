@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    SyntheticTokenPipeline,
+    make_batch_specs,
+    sensor_field_batch,
+)
+
+__all__ = ["SyntheticTokenPipeline", "make_batch_specs", "sensor_field_batch"]

@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the method's compute hot-spot (fused Block-ELL
+Laplacian matvec + Chebyshev recurrence), with jnp oracles in ref.py."""
+
+from repro.kernels.cheb_bsr import cheb_step_pallas
+from repro.kernels.ops import BlockEll, bsr_from_dense, cheb_apply_bsr
+
+__all__ = ["BlockEll", "bsr_from_dense", "cheb_apply_bsr", "cheb_step_pallas"]

@@ -1,0 +1,144 @@
+"""Pallas TPU kernel: Block-ELL Laplacian matvec fused with the Chebyshev
+recurrence step (paper eq. 9) — the compute hot-spot of the whole method.
+
+Every Chebyshev order is ``T_k = (2/a) L T_{k-1} - 2 T_{k-1} - T_{k-2}``.
+A naive implementation issues an SpMV and two AXPYs, round-tripping
+``T_{k-1}``/``T_k`` through HBM three times per order. This kernel fuses the
+whole step: one pass over the Laplacian tiles, the affine combine applied in
+VMEM before the single store of ``T_k``.
+
+TPU adaptation (DESIGN.md Sec. 3): the GPU-idiomatic CSR gather-per-row is
+replaced by Block-ELL — spatially-ordered vertices give few dense
+``(block x block)`` tiles per block-row; each tile multiply is an MXU
+contraction against an ``F``-wide signal batch. The data-dependent tile
+gather uses **scalar prefetch**: block-column indices live in SMEM and feed
+the BlockSpec index_map, so Pallas pipelines the HBM->VMEM tile streams
+without kernel-visible gathers.
+
+Grid: ``(F_tiles, n_block_rows, k_max)`` with the sparse-column loop
+innermost — the output block revisits k_max times and accumulates in VMEM
+(init at j == 0, combine at j == k_max - 1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["cheb_step_pallas"]
+
+
+def _cheb_step_kernel(
+    # scalar-prefetch operands
+    cols_ref,  # (n_rows, k_max) int32, SMEM
+    # tensor operands
+    blocks_ref,  # (1, 1, B, B)    Laplacian tile for (i, j)
+    t1g_ref,  # (B, FT)            gathered T_{k-1}[cols[i, j]]
+    t1s_ref,  # (B, FT)            aligned  T_{k-1}[i]
+    t2s_ref,  # (B, FT)            aligned  T_{k-2}[i]
+    out_ref,  # (B, FT)            T_k[i]
+    acc_ref,  # (B, FT) f32 VMEM scratch — accumulator survives the j loop
+    *,
+    k_max: int,
+    ca: float,
+    cb: float,
+    cc: float,
+):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU contraction for this Laplacian tile; accumulate L @ t1 in f32
+    # VMEM scratch (bf16 inputs still accumulate at full precision).
+    acc_ref[...] += jnp.dot(
+        blocks_ref[0, 0], t1g_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(j == k_max - 1)
+    def _combine():
+        # Fused affine recurrence: T_k = ca * (L t1) + cb * t1 + cc * t2,
+        # combined in f32 and cast once on the single store of T_k.
+        out_ref[...] = (
+            ca * acc_ref[...]
+            + cb * t1s_ref[...].astype(jnp.float32)
+            + cc * t2s_ref[...].astype(jnp.float32)
+        ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("alpha", "first", "f_tile", "interpret"),
+)
+def cheb_step_pallas(
+    blocks: jax.Array,
+    cols: jax.Array,
+    t1: jax.Array,
+    t2: jax.Array,
+    *,
+    alpha: float,
+    first: bool = False,
+    f_tile: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """One fused Chebyshev recurrence step on Block-ELL operands.
+
+    Args:
+      blocks: (n_rows, k_max, B, B) Laplacian tiles.
+      cols:   (n_rows, k_max) int32 block-column ids (padding: col 0 +
+        zero tile).
+      t1: (N, F) ``T_{k-1}`` with N = n_rows * B.
+      t2: (N, F) ``T_{k-2}`` (pass t1 when ``first=True``; ignored).
+      alpha: lmax / 2 spectrum shift.
+      first: compute ``T_1 = (L - a I) f / a`` instead of the k >= 2 step.
+      f_tile: F-dimension tile (defaults to min(F, 128)).
+      interpret: run in Pallas interpret mode (CPU validation path).
+
+    Returns: (N, F) ``T_k``.
+    """
+    n_rows, k_max, b, b2 = blocks.shape
+    assert b == b2, blocks.shape
+    n, f = t1.shape
+    assert n == n_rows * b, (t1.shape, blocks.shape)
+    ft = f_tile or min(f, 128)
+    assert f % ft == 0, (f, ft)
+
+    if first:
+        ca, cb, cc = 1.0 / alpha, -1.0, 0.0
+    else:
+        ca, cb, cc = 2.0 / alpha, -2.0, -1.0
+
+    kernel = functools.partial(
+        _cheb_step_kernel, k_max=k_max, ca=ca, cb=cb, cc=cc
+    )
+
+    grid = (f // ft, n_rows, k_max)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (1, 1, b, b), lambda fi, i, j, cols: (i, j, 0, 0)
+                ),
+                pl.BlockSpec(  # gathered t1 rows via scalar-prefetched cols
+                    (b, ft), lambda fi, i, j, cols: (cols[i, j], fi)
+                ),
+                pl.BlockSpec((b, ft), lambda fi, i, j, cols: (i, fi)),
+                pl.BlockSpec((b, ft), lambda fi, i, j, cols: (i, fi)),
+            ],
+            out_specs=pl.BlockSpec((b, ft), lambda fi, i, j, cols: (i, fi)),
+            scratch_shapes=[pltpu.VMEM((b, ft), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n, f), t1.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(cols, blocks, t1, t1, t2)

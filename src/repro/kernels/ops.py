@@ -1,0 +1,71 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``cheb_apply_bsr`` runs the full union-of-multipliers application (paper
+Alg. 1 compute) with the fused Pallas step as the matvec engine; the
+coefficient combine (eq. 11) stays in jnp — it is O(eta N F) AXPYs which XLA
+fuses into the recurrence's consumers.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cheb_bsr import cheb_step_pallas
+from repro.kernels.ref import BlockEll, bsr_from_dense
+
+__all__ = ["BlockEll", "bsr_from_dense", "cheb_apply_bsr"]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("lmax", "interpret", "f_tile")
+)
+def cheb_apply_bsr(
+    blocks: jax.Array,
+    cols: jax.Array,
+    f: jax.Array,
+    coeffs: jax.Array,
+    lmax: float,
+    *,
+    interpret: bool = False,
+    f_tile: int | None = None,
+) -> jax.Array:
+    """``Phi~ f`` with the fused Pallas Chebyshev engine.
+
+    Args:
+      blocks/cols: Block-ELL Laplacian (see kernels/ref.py).
+      f: (N, F) signal batch (use F >= 8 for MXU efficiency on real TPUs).
+      coeffs: (eta, M+1) Chebyshev coefficients.
+      lmax: spectrum bound (static).
+
+    Returns: (eta, N, F).
+    """
+    coeffs = jnp.asarray(coeffs, f.dtype)
+    alpha = lmax / 2.0
+    step = functools.partial(
+        cheb_step_pallas, blocks, cols,
+        alpha=alpha, f_tile=f_tile, interpret=interpret,
+    )
+
+    t0 = f
+    t1 = step(f, f, first=True)
+    acc = (
+        0.5 * coeffs[:, 0, None, None] * t0[None]
+        + coeffs[:, 1, None, None] * t1[None]
+    )
+
+    if coeffs.shape[1] <= 2:
+        return acc
+
+    def body(carry, c_k):
+        t_prev1, t_prev2, acc = carry
+        t_k = step(t_prev1, t_prev2)
+        acc = acc + c_k[:, None, None] * t_k[None]
+        return (t_k, t_prev1, acc), None
+
+    (_, _, acc), _ = jax.lax.scan(
+        body, (t1, t0, acc), jnp.swapaxes(coeffs[:, 2:], 0, 1)
+    )
+    return acc

@@ -1,0 +1,1 @@
+"""Launch layer: production meshes, AOT dry-run, training/serving CLIs."""

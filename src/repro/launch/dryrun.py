@@ -1,0 +1,410 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod AOT dry-run: lower + compile every (architecture x shape x
+mesh) cell against the production meshes and extract the roofline terms.
+
+No arrays are ever materialized — parameters, optimizer state, KV caches
+and batches are ShapeDtypeStructs; ``jit(...).lower(...).compile()`` proves
+the sharding config is coherent (no mismatch / unsupported collective) and
+``memory_analysis()`` proves (or quantifies) per-device fit.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3_405b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results.json]
+  python -m repro.launch.dryrun --gsp           # the paper's own workload
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.data.pipeline import make_batch_specs
+from repro.launch import hlo_analysis as H
+from repro.launch.hlo_weighted import analyze_hlo
+from repro.launch.cells import (
+    CELLS, FRONTEND, cell_skip_reason, default_parallel, shape_with_frontend,
+)
+from repro.launch.mesh import axis_sizes, make_production_mesh
+from repro.models import lm
+from repro.models.config import ALL_SHAPES, ModelConfig, ParallelConfig
+from repro.models.sharding import logical_to_physical, make_rules
+from repro.optim import AdamWConfig, init_opt_state, opt_state_specs
+from repro.train.trainer import make_train_step
+
+SHAPES = {s.name: s for s in ALL_SHAPES}
+
+
+# ------------------------------------------------------------ utilities --
+
+
+def param_count(shapes_tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(shapes_tree)))
+
+
+def active_param_count(cfg: ModelConfig, shapes_tree) -> int:
+    """Matmul-active params: routed experts scaled by top_k/n_experts;
+    embedding-table gather excluded for untied embeddings (the logits
+    matmul itself is counted via the tied/untied table)."""
+    total = param_count(shapes_tree)
+    if cfg.moe is not None:
+        leaves = jax.tree_util.tree_flatten_with_path(shapes_tree)[0]
+        routed = sum(
+            int(np.prod(leaf.shape))
+            for path, leaf in leaves
+            if any(getattr(p, "key", None) in ("wi_gate", "wi_up", "wo")
+                   for p in path)
+            and any(getattr(p, "key", None) == "ffn" for p in path)
+            and leaf.ndim == 4  # stacked (layers, E, d, f) expert weights
+        )
+        total -= routed
+        total += int(routed * cfg.moe.top_k / cfg.moe.n_experts)
+    if not cfg.tie_embeddings:
+        total -= cfg.vocab_size * cfg.d_model  # gather-only table
+    return total
+
+
+def _rough_param_bytes(cfg: ModelConfig) -> float:
+    """Cheap parameter-byte estimate (no abstract init needed)."""
+    d, l, ff, v = cfg.d_model, cfg.n_layers, cfg.d_ff, cfg.vocab_size
+    per_layer = 4 * d * cfg.n_heads * cfg.head_dim_ // cfg.q_per_kv \
+        + 3 * d * ff
+    if cfg.moe is not None:
+        per_layer = 4 * d * d * 2 + 3 * d * cfg.moe.d_expert * (
+            cfg.moe.n_experts + cfg.moe.n_shared)
+    total = l * per_layer + v * d * (1 if cfg.tie_embeddings else 2)
+    return total * jnp.dtype(cfg.param_dtype).itemsize
+
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell."""
+    cfg = registry.get(arch)
+    shape = shape_with_frontend(arch, SHAPES[shape_name])
+    return make_batch_specs(cfg, shape, dtype=cfg.dtype())
+
+
+# ------------------------------------------------------------ cell build --
+
+
+def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               par: ParallelConfig | None = None):
+    """Returns (step_fn, abstract_args, in_shardings, donate, meta)."""
+    cfg = registry.get(arch)
+    shape = shape_with_frontend(arch, SHAPES[shape_name])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    sizes = axis_sizes(mesh)
+    par = par or default_parallel(arch, shape)
+    if par.moe_groups == 1:
+        # one dispatch group per DP shard keeps MoE buffers group-local
+        dp = sizes.get("data", 1) * sizes.get("pod", 1)
+        par = dataclasses.replace(par, moe_groups=dp)
+    if shape.kind != "train":
+        # serving: keep weights TP-resident when a model-axis shard fits
+        # HBM (low-latency path); FSDP-gather per layer group otherwise
+        # (the only way the >=398B models serve on this mesh at all).
+        tp_bytes = _rough_param_bytes(cfg) / sizes.get("model", 1)
+        par = dataclasses.replace(par, fsdp=tp_bytes > 12 * 2**30)
+    is_decode = shape.kind == "decode"
+    rules = make_rules(
+        axis_sizes=sizes,
+        fsdp=par.fsdp,
+        seq_parallel=par.seq_parallel,
+        shard_kv_seq=is_decode,
+        expert_data_parallel=(
+            cfg.moe is not None and cfg.moe.n_experts > 64),
+    )
+
+    p_shapes, p_specs = lm.abstract_init(cfg)
+    p_shard = jax.tree.map(
+        lambda sp: NamedSharding(mesh, sp),
+        logical_to_physical(p_specs, rules, p_shapes))
+    batch_specs = input_specs(arch, shape_name)
+    n_params = param_count(p_shapes)
+    n_active = active_param_count(cfg, p_shapes)
+
+    if shape.kind == "train":
+        optc = AdamWConfig(moment_dtype=par.optimizer_dtype)
+        o_shapes = jax.eval_shape(lambda p: init_opt_state(p, optc), p_shapes)
+        o_shard = jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp),
+            logical_to_physical(opt_state_specs(p_specs), rules, o_shapes))
+        b_shard = _batch_shardings(batch_specs, mesh, rules)
+        if par.grad_sync == "gossip":
+            # the paper's technique as the DP gradient collective:
+            # requires params replicated across 'data' (no FSDP). Inside
+            # the manual shard_map region 'data' may not appear in
+            # sharding constraints, so the step gets data-free rules.
+            assert not par.fsdp, "gossip sync needs non-FSDP params"
+            from repro.train.trainer import make_gossip_train_step
+            inner_rules = make_rules(
+                axis_sizes={k: v for k, v in sizes.items() if k != "data"},
+                fsdp=False, seq_parallel=par.seq_parallel)
+            step = make_gossip_train_step(cfg, par, optc, inner_rules, mesh)
+        else:
+            step = make_train_step(cfg, par, optc, rules)
+        args = (p_shapes, o_shapes, batch_specs)
+        shardings = (p_shard, o_shard, b_shard)
+        donate = (0, 1)
+        tokens = shape.global_batch * shape.seq_len
+        model_flops = H.model_flops_train(n_active, tokens)
+    elif shape.kind == "prefill":
+        def step(params, batch):
+            logits, _ = lm.forward(
+                params, batch["tokens"], cfg, par, rules,
+                extra_embeds=batch.get("extra_embeds"), last_only=True)
+            return logits
+        b_shard = _batch_shardings(batch_specs, mesh, rules)
+        args = (p_shapes, batch_specs)
+        shardings = (p_shard, b_shard)
+        donate = ()
+        model_flops = H.model_flops_infer(
+            n_active, shape.global_batch * shape.seq_len)
+    else:  # decode
+        c_shapes = jax.eval_shape(
+            lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len,
+                                  cfg.dtype()))
+        c_shard = jax.tree.map(
+            lambda sp: NamedSharding(mesh, sp),
+            logical_to_physical(lm.cache_logical_specs(cfg), rules,
+                                c_shapes))
+        t_shard = {"token": NamedSharding(
+            mesh, rules.physical(("act_batch", None),
+                                 (shape.global_batch, 1)))}
+
+        def step(params, batch, cache):
+            return lm.decode_step(params, batch["token"], cache, cfg, par,
+                                  rules)
+        args = (p_shapes, batch_specs, c_shapes)
+        shardings = (p_shard, t_shard, c_shard)
+        donate = (2,)
+        model_flops = H.model_flops_infer(n_active, shape.global_batch)
+
+    meta = {
+        "arch": arch, "shape": shape_name, "kind": shape.kind,
+        "multi_pod": multi_pod, "n_chips": int(np.prod(mesh.devices.shape)),
+        "n_params": n_params, "n_params_active": n_active,
+        "model_flops": model_flops,
+        "parallel": dataclasses.asdict(par),
+    }
+    return step, args, shardings, donate, mesh, meta
+
+
+def _batch_shardings(batch_specs, mesh, rules):
+    out = {}
+    for k, v in batch_specs.items():
+        logical = ("act_batch",) + (None,) * (len(v.shape) - 1)
+        out[k] = NamedSharding(mesh, rules.physical(logical, v.shape))
+    return out
+
+
+# --------------------------------------------------------------- run one --
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             par: ParallelConfig | None = None, verbose: bool = True):
+    t0 = time.monotonic()
+    step, args, shardings, donate, mesh, meta = build_cell(
+        arch, shape_name, multi_pod=multi_pod, par=par)
+    with mesh:
+        jitted = jax.jit(step, in_shardings=shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        text = compiled.as_text()
+
+    cfg_width = jnp.dtype(registry.get(arch).activation_dtype).itemsize
+    w = analyze_hlo(text, activation_width=cfg_width)
+    terms = H.roofline_terms(w.matmul_flops, w.hbm_bytes,
+                             w.collective_bytes, n_chips=meta["n_chips"],
+                             model_flops=meta["model_flops"])
+    record = {
+        **meta,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "collective_bytes_by_op": {k: int(v) for k, v in
+                                   w.collective_bytes.items()},
+        "collective_rounds": {k: round(v, 1) for k, v in
+                              w.collective_rounds.items() if v},
+        "while_trip_counts": w.while_trip_counts[:12],
+        "cost_analysis_flops_unweighted": float(cost.get("flops", 0.0)),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "total_per_device": (mem.argument_size_in_bytes
+                                 + mem.temp_size_in_bytes
+                                 + mem.output_size_in_bytes
+                                 - mem.alias_size_in_bytes),
+        },
+        **terms,
+    }
+    if verbose:
+        gb = record["memory"]["total_per_device"] / 2**30
+        print(f"[{arch}.{shape_name}{'.2pod' if multi_pod else ''}] "
+              f"compile={t_compile:.0f}s mem/dev={gb:.1f}GiB "
+              f"compute={terms['compute_s']:.4f}s "
+              f"memory={terms['memory_s']:.4f}s "
+              f"collective={terms['collective_s']:.4f}s "
+              f"bottleneck={terms['bottleneck']} "
+              f"roofline_frac={terms.get('roofline_fraction', 0):.3f}",
+              flush=True)
+    return record
+
+
+# ------------------------------------------------------- GSP (the paper) --
+
+
+def run_gsp_cell(*, multi_pod: bool = False, backend: str = "halo",
+                 side: int = 512, signal_batch: int = 128, order: int = 20,
+                 verbose: bool = True):
+    """The paper's own workload on the production mesh: distributed
+    Chebyshev application (Tikhonov denoising filter) over a ``side^2``
+    vertex grid graph partitioned across all chips.
+
+    Backends: 'allgather' (naive baseline), 'halo' (Algorithm 1,
+    paper-faithful), 'ca<depth>' (beyond-paper communication-avoiding
+    variant: depth-row halos, depth orders per exchange)."""
+    from repro.core import chebyshev, multipliers
+    from repro.core.distributed import (
+        grid_allgather_matvec, grid_cheb_apply_ca, grid_slab_matvec)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = int(np.prod(mesh.devices.shape))
+    axes = mesh.axis_names
+    assert side % n_chips == 0, (side, n_chips)
+    lmax = 8.0  # grid Laplacian bound
+    coeffs = chebyshev.cheb_coefficients(
+        [multipliers.tikhonov(1.0, 1)], order, lmax)
+
+    n = side * side
+    f_spec = jax.ShapeDtypeStruct((n, signal_batch), jnp.float32)
+    cj = jnp.asarray(coeffs, jnp.float32)
+
+    if backend.startswith("ca"):
+        # depth cannot exceed rows-per-slab (one-hop halos)
+        depth = min(int(backend[2:] or 2), max(side // n_chips, 1))
+
+        def local_fn(f_loc):
+            return grid_cheb_apply_ca(
+                f_loc, cj, lmax, side=side, axis_names=axes,
+                n_parts=n_chips, depth=depth)
+    else:
+        mv_fn = grid_slab_matvec if backend == "halo" \
+            else grid_allgather_matvec
+
+        def local_fn(f_loc):
+            mv = lambda v: mv_fn(v, side=side, axis_names=axes,
+                                 n_parts=n_chips)
+            return chebyshev.cheb_apply(mv, f_loc, cj, lmax)
+
+    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=(P(axes),),
+                       out_specs=P(None, axes))
+    t0 = time.monotonic()
+    with mesh:
+        lowered = jax.jit(fn).lower(f_spec)
+        compiled = lowered.compile()
+        cost = compiled.cost_analysis()
+        mem = compiled.memory_analysis()
+        text = compiled.as_text()
+    w = analyze_hlo(text, activation_width=4)  # GSP runs f32
+    # useful flops: 2 * nnz * F per matvec * M orders (+ combine AXPYs)
+    nnz = 2 * (2 * side * (side - 1))  # directed edges
+    model_flops = order * 2.0 * (nnz + n) * signal_batch
+    terms = H.roofline_terms(w.matmul_flops, w.hbm_bytes,
+                             w.collective_bytes, n_chips=n_chips,
+                             model_flops=model_flops)
+    coll = {k: int(v) for k, v in w.collective_bytes.items()}
+    record = {
+        "arch": "sensor_gsp", "shape": f"grid{side}x{side}_F{signal_batch}",
+        "kind": "gsp", "backend": backend, "multi_pod": multi_pod,
+        "n_chips": n_chips, "order": order,
+        "halo_words_per_matvec": 2 * side * (n_chips - 1),
+        "collective_rounds": {k: v for k, v in
+                              w.collective_rounds.items() if v},
+        "compile_s": round(time.monotonic() - t0, 1),
+        "collective_bytes_by_op": coll,
+        "memory": {"argument_bytes": mem.argument_size_in_bytes,
+                   "temp_bytes": mem.temp_size_in_bytes,
+                   "total_per_device": (mem.argument_size_in_bytes
+                                        + mem.temp_size_in_bytes)},
+        **terms,
+    }
+    if verbose:
+        print(f"[sensor_gsp.{backend}{'.2pod' if multi_pod else ''}] "
+              f"compute={terms['compute_s']:.6f}s "
+              f"memory={terms['memory_s']:.6f}s "
+              f"collective={terms['collective_s']:.6f}s "
+              f"bottleneck={terms['bottleneck']}", flush=True)
+    return record
+
+
+# ------------------------------------------------------------------ CLI --
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--gsp", action="store_true")
+    ap.add_argument("--gsp-backend", default="halo")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    records = []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    if args.gsp:
+        for mp in meshes:
+            for backend in ("halo", "allgather", "ca2"):
+                records.append(run_gsp_cell(multi_pod=mp, backend=backend))
+    elif args.all:
+        for mp in meshes:
+            for cell in CELLS:
+                reason = cell_skip_reason(cell)
+                if reason:
+                    records.append({
+                        "arch": cell.arch, "shape": cell.shape.name,
+                        "multi_pod": mp, "skipped": reason})
+                    print(f"[{cell.name}] SKIPPED: {reason}", flush=True)
+                    continue
+                try:
+                    records.append(run_cell(cell.arch, cell.shape.name,
+                                            multi_pod=mp))
+                except Exception as e:  # record failures: they are bugs
+                    traceback.print_exc()
+                    records.append({
+                        "arch": cell.arch, "shape": cell.shape.name,
+                        "multi_pod": mp, "error": str(e)})
+    else:
+        records.append(run_cell(args.arch, args.shape,
+                                multi_pod=args.multi_pod))
+
+    if args.out:
+        Path(args.out).parent.mkdir(parents=True, exist_ok=True)
+        existing = []
+        if Path(args.out).exists():
+            existing = json.loads(Path(args.out).read_text())
+        Path(args.out).write_text(json.dumps(existing + records, indent=1))
+        print(f"wrote {len(records)} records -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

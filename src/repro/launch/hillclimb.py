@@ -1,0 +1,63 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Perf-iteration driver: re-lower one cell with ParallelConfig overrides
+and append the labelled result to the experiment log (§Perf workflow).
+
+  python -m repro.launch.hillclimb --arch llama3_405b --shape train_4k \
+      --set attn_impl=chunked seq_parallel=true microbatches=8 \
+      --tag chunked+sp+mb8 --out experiments/perf_hillclimb.json
+"""
+
+import argparse
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.launch.cells import default_parallel, shape_with_frontend
+from repro.launch.dryrun import SHAPES, run_cell
+
+
+def parse_overrides(pairs):
+    out = {}
+    for pair in pairs:
+        k, v = pair.split("=", 1)
+        if v.lower() in ("true", "false"):
+            out[k] = v.lower() == "true"
+        else:
+            try:
+                out[k] = int(v)
+            except ValueError:
+                try:
+                    out[k] = float(v)
+                except ValueError:
+                    out[k] = v
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--set", nargs="*", default=[])
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--out", default="experiments/perf_hillclimb.json")
+    args = ap.parse_args()
+
+    overrides = parse_overrides(args.set)
+    shape = shape_with_frontend(args.arch, SHAPES[args.shape])
+    par = default_parallel(args.arch, shape, **overrides)
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod, par=par)
+    rec["tag"] = args.tag
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    existing = json.loads(out.read_text()) if out.exists() else []
+    existing.append(rec)
+    out.write_text(json.dumps(existing, indent=1))
+    print(f"[{args.tag}] appended -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Roofline-term extraction from compiled (SPMD-partitioned) HLO.
+
+``cost_analysis()`` supplies per-device HLO FLOPs and bytes; collective
+traffic is not in cost_analysis, so we parse the partitioned HLO text and
+sum *operand* sizes of every communication op (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute), per the brief.
+
+Hardware model (TPU v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Mapping
+
+__all__ = ["HW", "Hardware", "parse_collective_bytes", "roofline_terms",
+           "count_hlo_ops"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    ici_bw: float = 50e9             # bytes/s per link
+
+
+HW = Hardware()
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*?)\s*"
+                     r"([\w\-]+)\(")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-opcode sum of collective *operand* bytes (per device).
+
+    Two passes: (1) result-shape bytes of every defined instruction,
+    (2) for each collective instruction, sum its operands' bytes.
+    """
+    sizes: dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if m:
+            sizes[m.group(1)] = _shape_bytes(m.group(2))
+
+    out = {k: 0 for k in _COLLECTIVES}
+    oper_re = re.compile(r"%[\w\.\-]+")
+    for ln in lines:
+        m = _DEF_RE.match(ln)
+        if not m:
+            continue
+        op = m.group(3)
+        base = next((c for c in _COLLECTIVES
+                     if op == c or op.startswith(c + "-")), None)
+        # exclude -start/-done duplicates: count only -start or the sync op
+        if base is None or op.endswith("-done"):
+            continue
+        args = ln[m.end():].split(")", 1)[0]
+        for name in oper_re.findall(args):
+            out[base] += sizes.get(name, 0)
+    return out
+
+
+def count_hlo_ops(hlo_text: str, opcodes: tuple[str, ...]) -> dict[str, int]:
+    counts = {k: 0 for k in opcodes}
+    for ln in hlo_text.splitlines():
+        m = _DEF_RE.match(ln)
+        if m:
+            for k in opcodes:
+                if m.group(3) == k or m.group(3).startswith(k + "."):
+                    counts[k] += 1
+    return counts
+
+
+def roofline_terms(
+    flops: float,
+    bytes_acc: float,
+    collective: Mapping[str, float],
+    *,
+    n_chips: int,
+    hw: Hardware = HW,
+    model_flops: float | None = None,
+) -> dict:
+    """Three roofline terms (seconds) from per-device analysis numbers.
+
+    All inputs are per-device (the compiled module is the per-device
+    program; trip-count weighting applied upstream — hlo_weighted.py), i.e.
+    HLO_FLOPs_total = flops * n_chips, so
+    compute = HLO_FLOPs_total / (chips * peak) = flops / peak, etc.
+    """
+    coll_bytes = float(sum(collective.values()))
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_acc / hw.hbm_bw
+    collective_s = coll_bytes / hw.ici_bw
+    terms = {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "hlo_flops_per_device": flops,
+        "hlo_bytes_per_device": bytes_acc,
+        "collective_bytes_per_device": coll_bytes,
+        "bottleneck": max(
+            (("compute", compute_s), ("memory", memory_s),
+             ("collective", collective_s)), key=lambda kv: kv[1])[0],
+    }
+    if model_flops is not None:
+        total_hlo = flops * n_chips
+        terms["model_flops"] = model_flops
+        terms["useful_flop_ratio"] = (
+            model_flops / total_hlo if total_hlo else 0.0)
+        bound_s = max(compute_s, memory_s, collective_s)
+        ideal_s = model_flops / (n_chips * hw.peak_flops)
+        terms["roofline_fraction"] = ideal_s / bound_s if bound_s else 0.0
+    return terms
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """MODEL_FLOPS = 6 N D (fwd+bwd) for dense; pass active params for MoE."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_infer(n_params_active: float, tokens: float) -> float:
+    """Forward-only: 2 N D."""
+    return 2.0 * n_params_active * tokens

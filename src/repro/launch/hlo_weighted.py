@@ -1,0 +1,381 @@
+"""Trip-count-weighted HLO analysis.
+
+XLA's ``cost_analysis()`` (and a naive text scan) count a ``while`` body
+ONCE, but our programs keep layers / microbatches / Chebyshev orders /
+KV chunks rolled in ``lax.scan`` loops — so FLOPs, bytes and collective
+traffic must be weighted by loop trip counts.
+
+This module parses the post-SPMD HLO text into computations, extracts each
+while loop's trip count from its condition (`compare(counter, constant),
+direction=LT/LE`), propagates multipliers through the call graph
+(while bodies, fusions, calls, conditionals), and accumulates:
+
+  * matmul FLOPs (dot ops: 2 x prod(output dims) x prod(contracting dims))
+  * HBM byte traffic at fusion/instruction boundaries (operands + outputs,
+    skipping free ops: parameter/constant/tuple/gte/bitcast)
+  * collective operand bytes per opcode
+
+Numbers are per-device (the compiled module is the per-device program).
+Elementwise FLOPs are ignored (matmul-dominated workloads; consistent with
+the 6ND MODEL_FLOPS convention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+__all__ = ["analyze_hlo", "WeightedCosts"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\((.*)$")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_NAME_RE = re.compile(r"%[\w\.\-]+")
+_ATTR_COMP_RE = re.compile(r"(condition|body|calls|to_apply|branch_computations)="
+                           r"(\{[^}]*\}|%?[\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+             "bitcast", "copy", "after-all", "partition-id", "replica-id",
+             "iota"}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_dims(shape_str: str):
+    """[(dtype, [dims...]), ...] for a (possibly tuple) shape string."""
+    out = []
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        d = [int(x) for x in dims.split(",")] if dims else []
+        out.append((dtype, d))
+    return out
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _shape_bytes_capped(shape_str: str, max_width: int | None) -> int:
+    """Bytes with per-element width capped at ``max_width``.
+
+    XLA:CPU's float-normalization pass promotes bf16 dots (and the
+    collectives adjacent to them) to f32 — a TPU lowering keeps bf16.
+    Capping element width at the program's activation width models the
+    TPU collective volume."""
+    if max_width is None:
+        return _shape_bytes(shape_str)
+    total = 0
+    for dtype, dims in _shape_dims(shape_str):
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * min(_DTYPE_BYTES[dtype], max_width)
+    return total
+
+
+@dataclasses.dataclass
+class _Instr:
+    name: str
+    shape: str
+    op: str
+    rest: str  # text after the opening paren
+
+
+@dataclasses.dataclass
+class WeightedCosts:
+    matmul_flops: float
+    hbm_bytes: float
+    collective_bytes: dict[str, float]
+    while_trip_counts: list[int]
+    collective_rounds: dict[str, float] = dataclasses.field(
+        default_factory=dict)  # weighted op counts (latency proxy)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+
+def _parse_computations(text: str) -> dict[str, list[_Instr]]:
+    comps: dict[str, list[_Instr]] = {}
+    current: list[_Instr] | None = None
+    entry_name = None
+    for line in text.splitlines():
+        # computation headers start at column 0 with ENTRY or %name (
+        if line[:1] in ("%", "E"):
+            m = _COMP_RE.match(line)
+            if m:
+                current = comps.setdefault(m.group(1), [])
+                if line.startswith("ENTRY"):
+                    entry_name = m.group(1)
+                continue
+        im = _INSTR_RE.match(line)
+        if im and current is not None:
+            current.append(_Instr(im.group(1), im.group(2), im.group(3),
+                                  im.group(4)))
+    return comps, entry_name
+
+
+def _operand_names(instr: _Instr) -> list[str]:
+    args = instr.rest.split(")", 1)[0]
+    return _NAME_RE.findall(args)
+
+
+def _called_comps(instr: _Instr) -> list[str]:
+    out = []
+    for _, val in _ATTR_COMP_RE.findall(instr.rest):
+        for name in re.findall(r"[\w\.\-]+", val):
+            out.append(name.lstrip("%"))
+    return out
+
+
+def _trip_count(cond_instrs: list[_Instr]) -> int:
+    """Trip count from the condition computation.
+
+    jax scans compare the carried counter against a constant bound; the
+    compare itself may be wrapped in a kLoop fusion, so the robust
+    extraction is the largest integer constant defined in the condition
+    (condition computations contain nothing else of that form)."""
+    best = 1
+    for ins in cond_instrs:
+        if ins.op == "constant":
+            cm = _CONST_RE.search("constant(" + ins.rest)
+            if cm and ins.shape.startswith(("s32", "s64", "u32", "u64")):
+                best = max(best, int(cm.group(1)))
+    return best
+
+
+def _dot_flops(instr: _Instr, sizes_dims: dict[str, list]) -> float:
+    """2 x prod(output dims) x prod(contracting dims of lhs)."""
+    out_dims = _shape_dims(instr.shape)
+    out_n = 1
+    for _, d in out_dims:
+        for x in d:
+            out_n *= x
+    ops = _operand_names(instr)
+    if not ops:
+        return 0.0
+    lhs = sizes_dims.get(ops[0])
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", instr.rest)
+    contract = 1
+    if lhs and m and m.group(1):
+        dims = lhs[0][1] if lhs else []
+        for i in m.group(1).split(","):
+            i = int(i)
+            if i < len(dims):
+                contract *= dims[i]
+    return 2.0 * out_n * contract
+
+
+def analyze_hlo(text: str, activation_width: int | None = None
+                ) -> WeightedCosts:
+    """``activation_width``: itemsize (bytes) of the program's intended
+    activation dtype; collective operand bytes are capped at this width
+    (see _shape_bytes_capped)."""
+    comps, entry_name = _parse_computations(text)
+
+    # name -> shape dims/bytes, global (HLO names are module-unique).
+    sizes_dims: dict[str, list] = {}
+    sizes_bytes: dict[str, int] = {}
+    sizes_capped: dict[str, int] = {}
+    for instrs in comps.values():
+        for ins in instrs:
+            sizes_dims[ins.name] = _shape_dims(ins.shape)
+            sizes_bytes[ins.name] = _shape_bytes(ins.shape)
+            sizes_capped[ins.name] = _shape_bytes_capped(
+                ins.shape, activation_width)
+
+    # Multipliers via call-graph walk from the entry computation.
+    mult: dict[str, float] = defaultdict(float)
+    trips: list[int] = []
+
+    def walk(comp_name: str, m: float, fused: bool):
+        instrs = comps.get(comp_name)
+        if instrs is None:
+            return
+        mult[comp_name] += m if not fused else 0.0
+        for ins in instrs:
+            called = _called_comps(ins)
+            if ins.op == "while":
+                body_mult = m
+                for c in called:
+                    if c in comps:
+                        # condition computations: cheap, use m; body: m*trip
+                        pass
+                # identify body vs condition from attribute names
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.rest)
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.rest)
+                trip = 1
+                if cm and cm.group(1) in comps:
+                    trip = _trip_count(comps[cm.group(1)])
+                    trips.append(trip)
+                    walk(cm.group(1), m * trip, fused=False)
+                if bm and bm.group(1) in comps:
+                    walk(bm.group(1), m * trip, fused=False)
+            elif ins.op == "fusion":
+                # fused subcomputation: bytes counted at callsite; dots
+                # inside still counted (CPU keeps real matmuls unfused,
+                # but guard anyway).
+                for c in called:
+                    walk(c, m, fused=True)
+                    mult_fused[c] = mult_fused.get(c, 0.0) + m
+            elif called:
+                for c in called:
+                    if c in comps:
+                        walk(c, m, fused=False)
+
+    mult_fused: dict[str, float] = {}
+    if entry_name:
+        walk(entry_name, 1.0, fused=False)
+
+    flops = 0.0
+    hbm = 0.0
+    coll: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+    rounds: dict[str, float] = {k: 0.0 for k in _COLLECTIVES}
+
+    # Ops through which element-demand propagates unchanged inside a loop
+    # fusion (the consumer pulls only the elements it needs — including
+    # the bf16<->f32 converts XLA:CPU inserts around dots, which a TPU
+    # lowering does not materialize).
+    _PASSTHROUGH = {
+        "convert", "bitcast", "copy", "transpose", "reshape", "select",
+        "select-n", "compare", "add", "subtract", "multiply", "divide",
+        "maximum", "minimum", "and", "or", "not", "xor", "exp",
+        "exponential", "log", "tanh", "rsqrt", "sqrt", "negate", "abs",
+        "power", "sign", "floor", "ceil", "round-nearest-afz", "clamp",
+        "slice", "pad",
+    }
+
+    def fusion_bytes(ins: _Instr) -> float:
+        """HBM traffic of one fusion callsite (demand-driven model).
+
+        Loop-fusion semantics: only fusion *parameters* are read from HBM
+        and only the *root* is written; intermediates are virtual. A
+        parameter whose every consumer chain (through element-wise ops)
+        terminates in a dynamic-slice is read at slice size; a chain
+        terminating as the in-place buffer of a dynamic-update-slice is
+        aliased (charged at update size). A root that is a
+        dynamic-update-slice writes only the update region.
+        """
+        cm = re.search(r"calls=%?([\w\.\-]+)", ins.rest)
+        body = comps.get(cm.group(1)) if cm else None
+        if body is None:
+            return float(sizes_bytes.get(ins.name, 0) + sum(
+                sizes_bytes.get(o, 0) for o in _operand_names(ins)))
+        params: dict[int, str] = {}
+        uses: dict[str, list[_Instr]] = defaultdict(list)
+        for bi in body:
+            if bi.op == "parameter":
+                pm = re.match(r"(\d+)", bi.rest)
+                if pm:
+                    params[int(pm.group(1))] = bi.name
+            for o in _operand_names(bi):
+                uses[o].append(bi)
+        root = body[-1] if body else None
+
+        def read_bytes(pname: str, full: int) -> float:
+            charged = 0.0
+            stack = [pname]
+            seen = {pname}
+            while stack:
+                n = stack.pop()
+                for u in uses.get(n, []):
+                    ops_n = _operand_names(u)
+                    if u.op == "dynamic-slice" and ops_n[:1] == [n]:
+                        charged += sizes_bytes.get(u.name, 0)
+                    elif (u.op == "dynamic-update-slice"
+                          and ops_n[:1] == [n]):
+                        if len(ops_n) > 1:
+                            charged += sizes_bytes.get(ops_n[1], 0)
+                        # aliased in-place buffer: pass demand onward
+                        if u.name not in seen:
+                            seen.add(u.name)
+                            stack.append(u.name)
+                    elif u.op in _PASSTHROUGH:
+                        if u.name not in seen:
+                            seen.add(u.name)
+                            stack.append(u.name)
+                    else:
+                        return float(full)  # consumed wholesale
+            return min(charged, float(full))
+
+        callsite_ops = _operand_names(ins)
+        total = 0.0
+        for i, op_name in enumerate(callsite_ops):
+            pname = params.get(i)
+            full = sizes_bytes.get(op_name, 0)
+            total += full if pname is None else read_bytes(pname, full)
+        # output: root DUS (possibly behind converts) writes only updates
+        out_bytes = sizes_bytes.get(ins.name, 0)
+        r = root
+        while r is not None and r.op in ("convert", "bitcast", "copy"):
+            prev = _operand_names(r)[:1]
+            r = next((bi for bi in body if bi.name == (prev[0] if prev
+                                                       else None)), None)
+        if r is not None and r.op == "dynamic-update-slice":
+            ops_n = _operand_names(r)
+            if len(ops_n) > 1:
+                out_bytes = sizes_bytes.get(ops_n[1], 0)
+        total += out_bytes
+        return float(total)
+
+    for comp_name, instrs in comps.items():
+        m_plain = mult.get(comp_name, 0.0)
+        m_dot = m_plain + mult_fused.get(comp_name, 0.0)
+        if m_plain == 0.0 and m_dot == 0.0:
+            continue
+        for ins in instrs:
+            if ins.op in ("dot", "convolution") and m_dot:
+                flops += m_dot * _dot_flops(ins, sizes_dims)
+            if not m_plain:
+                continue
+            base = next((c for c in _COLLECTIVES
+                         if ins.op == c or ins.op.startswith(c + "-")), None)
+            if base and not ins.op.endswith("-done"):
+                rounds[base] += m_plain
+                if base == "all-gather":
+                    # ring AG pushes ~output bytes through each link; the
+                    # operand is just the local shard (P x smaller).
+                    coll[base] += m_plain * sizes_capped.get(ins.name, 0)
+                else:
+                    coll[base] += m_plain * sum(
+                        sizes_capped.get(o, 0) for o in _operand_names(ins))
+            if ins.op in _FREE_OPS or ins.op == "while":
+                continue
+            # HBM proxy: operands + output at instruction boundaries.
+            if ins.op == "fusion":
+                hbm += m_plain * fusion_bytes(ins)
+            elif ins.op == "dynamic-update-slice":
+                ops_n = _operand_names(ins)
+                upd = sizes_bytes.get(ops_n[1], 0) if len(ops_n) > 1 else 0
+                hbm += m_plain * 2 * upd
+            elif ins.op in ("dynamic-slice", "slice"):
+                hbm += m_plain * 2 * sizes_bytes.get(ins.name, 0)
+            else:
+                hbm += m_plain * (
+                    sizes_bytes.get(ins.name, 0)
+                    + sum(sizes_bytes.get(o, 0)
+                          for o in _operand_names(ins)))
+
+    return WeightedCosts(
+        matmul_flops=flops,
+        hbm_bytes=hbm,
+        collective_bytes=coll,
+        while_trip_counts=sorted(trips, reverse=True),
+        collective_rounds=rounds,
+    )

@@ -1,0 +1,97 @@
+"""Training launcher.
+
+Runs real training on the available devices (CPU smoke / small models) or,
+with ``--dryrun``, AOT-compiles the production-mesh cell instead (no
+allocation). The same ``make_train_step`` drives both paths.
+
+Examples:
+  python -m repro.launch.train --arch gemma2_2b --smoke --steps 50
+  python -m repro.launch.train --arch llama3_405b --shape train_4k --dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+
+import jax
+
+from repro.checkpoint import CheckpointManager, latest_step, restore
+from repro.configs import registry
+from repro.data import SyntheticTokenPipeline
+from repro.models import lm
+from repro.models.config import ParallelConfig
+from repro.optim import AdamWConfig, init_opt_state
+from repro.runtime import run_with_restarts
+from repro.train import Trainer, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="AOT-compile the production cell instead")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--grad-sync", default="allreduce",
+                    choices=["allreduce", "gossip"])
+    args = ap.parse_args()
+
+    if args.dryrun:
+        # delegate to the dry-run driver (forces 512 host devices, so it
+        # must own the process).
+        import os
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape]
+        if args.multi_pod:
+            cmd.append("--multi-pod")
+        raise SystemExit(subprocess.call(cmd))
+
+    cfg = registry.get_smoke(args.arch) if args.smoke else registry.get(args.arch)
+    par = ParallelConfig(attn_impl="naive", remat="none",
+                         grad_sync=args.grad_sync)
+    optc = AdamWConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
+                       total_steps=args.steps)
+    pipe = SyntheticTokenPipeline(cfg.vocab_size, args.seq, args.batch)
+    mgr = CheckpointManager(args.ckpt_dir, keep=3)
+    step_fn = jax.jit(make_train_step(cfg, par, optc))
+
+    def make_trainer(start_step: int) -> Trainer:
+        params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+        opt = init_opt_state(params, optc)
+        if start_step > 0:
+            snap = restore(args.ckpt_dir, start_step,
+                           {"params": params, "opt": opt})
+            params, opt = snap["params"], snap["opt"]
+            print(f"resumed from step {start_step}")
+        return Trainer(train_step=step_fn, pipeline=pipe, ckpt=mgr,
+                       params=params, opt_state=opt,
+                       ckpt_every=args.ckpt_every)
+
+    result = run_with_restarts(
+        make_trainer, args.steps,
+        latest_step_fn=lambda: latest_step(args.ckpt_dir))
+    losses = result["losses"]
+    print(json.dumps({
+        "arch": cfg.name, "steps": result["final_step"],
+        "loss_first5": round(float(sum(losses[:5]) / max(len(losses[:5]), 1)), 4),
+        "loss_last5": round(float(sum(losses[-5:]) / max(len(losses[-5:]), 1)), 4),
+        "wall_s": round(result["wall_s"], 1),
+        "restarts": result["restarts"],
+    }, indent=1))
+
+
+if __name__ == "__main__":
+    main()

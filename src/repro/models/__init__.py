@@ -1,0 +1,1 @@
+"""Unified LM model stack covering the assigned architecture families."""

@@ -1,0 +1,320 @@
+"""Core neural layers: norms, rotary embeddings, attention (naive/chunked/
+decode), dense FFN variants, embeddings.
+
+Pure-functional style: ``init_*`` returns ``(params, logical_specs)`` twin
+pytrees; ``apply`` functions are jit/vmap/scan-friendly. Softmax/norm
+statistics always accumulate in f32 regardless of activation dtype.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardingRules, constrain
+
+__all__ = [
+    "init_norm", "apply_norm", "init_embedding", "init_attention",
+    "apply_attention", "init_dense_ffn", "apply_dense_ffn", "rope",
+    "softcap", "init_linear", "make_cache", "NEG_INF",
+]
+
+NEG_INF = -1e30
+
+
+def _normal(key, shape, fan_in, dtype):
+    return (jax.random.normal(key, shape) / math.sqrt(max(fan_in, 1))).astype(dtype)
+
+
+def init_linear(key, d_in, d_out, dtype, spec, bias=False, bias_spec=None):
+    p = {"w": _normal(key, (d_in, d_out), d_in, dtype)}
+    s = {"w": spec}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+        s["b"] = bias_spec or (spec[-1],)
+    return p, s
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# ---------------------------------------------------------------- norms --
+
+
+def init_norm(cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    d = cfg.d_model
+    if cfg.norm == "layernorm":
+        return ({"w": jnp.ones((d,), dtype), "b": jnp.zeros((d,), dtype)},
+                {"w": ("d_model",), "b": ("d_model",)})
+    return {"w": jnp.ones((d,), dtype)}, {"w": ("d_model",)}
+
+
+def apply_norm(p, x, kind: str, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["w"].astype(jnp.float32)
+                + p["b"].astype(jnp.float32)).astype(x.dtype)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf**2, axis=-1, keepdims=True) + eps)
+    w = p["w"].astype(jnp.float32)
+    if kind == "rmsnorm_gemma":
+        w = 1.0 + w  # gemma zero-centred weight
+    return (y * w).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope --
+
+
+def rope(x, positions, theta: float, fraction: float = 1.0):
+    """Rotary embedding on the leading ``fraction`` of head dims.
+
+    x: (..., S, H, D); positions: broadcastable to (..., S).
+    """
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None, None].astype(jnp.float32) * freqs  # (...,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half].astype(jnp.float32), xr[..., half:].astype(jnp.float32)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def softcap(x, cap: float | None):
+    """Gemma-2 soft capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------ attention --
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    d, hd = cfg.d_model, cfg.head_dim_
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    bias = cfg.qkv_bias
+    p, s = {}, {}
+    p["q"], s["q"] = init_linear(kq, d, cfg.n_heads * hd, dtype,
+                                 ("d_model", "heads"), bias, ("heads",))
+    p["k"], s["k"] = init_linear(kk, d, cfg.n_kv_heads * hd, dtype,
+                                 ("d_model", "kv_heads"), bias, ("kv_heads",))
+    p["v"], s["v"] = init_linear(kv, d, cfg.n_kv_heads * hd, dtype,
+                                 ("d_model", "kv_heads"), bias, ("kv_heads",))
+    p["o"], s["o"] = init_linear(ko, cfg.n_heads * hd, d, dtype,
+                                 ("heads", "d_model"))
+    return p, s
+
+
+def _gqa_scores(q, k, scale, cap):
+    """q: (B,Sq,KVH,G,D)  k: (B,Skv,KVH,D) -> (B,KVH,G,Sq,Skv) f32.
+
+    The contraction runs in the input dtype and is upcast afterwards: on
+    TPU the MXU accumulates bf16 products in f32 regardless, while
+    requesting an f32 dot output here makes XLA:CPU materialize f32
+    copies of the (huge) KV operands in the decode loop carry — a
+    CPU-only artifact that would poison the dry-run memory analysis."""
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q, k)
+    return softcap(s.astype(jnp.float32) * scale, cap)
+
+
+def _mask(q_pos, k_pos, window):
+    m = q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= (q_pos[:, None] - k_pos[None, :]) < window
+    return m
+
+
+def _naive_attention(q, k, v, q_pos, k_pos, scale, cap, window, kv_valid):
+    scores = _gqa_scores(q, k, scale, cap)
+    mask = _mask(q_pos, k_pos, window)[None, None, None]  # (1,1,1,Sq,Skv)
+    if kv_valid is not None:
+        mask = mask & kv_valid[:, None, None, None, :]
+    scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhgqk,bkhd->bqhgd", w, v)
+
+
+def _chunked_attention(q, k, v, q_pos, k_pos, scale, cap, window, chunk):
+    """Flash-style streaming over KV chunks: O(Sq * chunk) live scores.
+
+    Memory-roofline lever: never materializes the (Sq, Skv) score matrix.
+    """
+    b, skv, kvh, d = k.shape
+    n_chunks = -(-skv // chunk)
+    pad = n_chunks * chunk - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pad), constant_values=2**30)
+    kc = k.reshape(b, n_chunks, chunk, kvh, d)
+    vc = v.reshape(b, n_chunks, chunk, kvh, d)
+    kp = k_pos.reshape(n_chunks, chunk)
+
+    g = q.shape[3]
+    sq = q.shape[1]
+    m0 = jnp.full((b, kvh, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, sq), jnp.float32)
+    acc0 = jnp.zeros((b, sq, kvh, g, d), jnp.float32)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kc_i, vc_i, kp_i = xs
+        s = _gqa_scores(q, kc_i, scale, cap)  # (b,kvh,g,sq,chunk)
+        msk = _mask(q_pos, kp_i, window)
+        s = jnp.where(msk, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows: keep m finite for exp arithmetic
+        m_safe = jnp.where(m_new == NEG_INF, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(msk, p, 0.0)
+        corr = jnp.exp(jnp.where(m == NEG_INF, NEG_INF, m - m_safe))
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(q.dtype), vc_i,
+                        preferred_element_type=jnp.float32)
+        acc_new = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0), (kc.swapaxes(0, 1), vc.swapaxes(0, 1), kp))
+    l = jnp.where(l == 0.0, 1.0, l)
+    out = acc / l.transpose(0, 3, 1, 2)[..., None]
+    return out.astype(q.dtype)
+
+
+def apply_attention(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    rules: ShardingRules | None,
+    positions: jax.Array,
+    window: int | None = None,
+    impl: str = "naive",
+    chunk: int = 1024,
+    cache: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Multi-head GQA attention with RoPE.
+
+    Train/prefill: ``cache=None``, x is (B, S, d), positions (S,).
+    Decode: ``cache`` holds k/v (B, S_max, KVH, D) + ``len`` scalar; x is
+    (B, 1, d) and positions (1,) == cache['len'].
+
+    Returns (output, updated_cache).
+    """
+    b, sq, _ = x.shape
+    hd, kvh, g = cfg.head_dim_, cfg.n_kv_heads, cfg.q_per_kv
+    q = linear(p["q"], x).reshape(b, sq, kvh, g, hd)
+    k = linear(p["k"], x).reshape(b, sq, kvh, hd)
+    v = linear(p["v"], x).reshape(b, sq, kvh, hd)
+
+    q = rope(q.reshape(b, sq, kvh * g, hd), positions, cfg.rope_theta,
+             cfg.rope_fraction).reshape(b, sq, kvh, g, hd)
+    k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    scale = 1.0 / math.sqrt(hd)
+
+    new_cache = None
+    if cache is None:
+        k_pos = positions
+        q_pos = positions
+        kf, vf = k, v
+        kv_valid = None
+    else:
+        # One-token decode: write k/v at index cache['len'].
+        idx = cache["len"]
+        kf = jax.lax.dynamic_update_slice(
+            cache["k"], k, (0, idx, 0, 0))
+        vf = jax.lax.dynamic_update_slice(
+            cache["v"], v, (0, idx, 0, 0))
+        new_cache = {"k": kf, "v": vf, "len": idx + sq}
+        s_max = kf.shape[1]
+        k_pos = jnp.arange(s_max)
+        q_pos = positions
+        kv_valid = (k_pos <= idx)[None, :]  # (1, S_max) broadcast over batch
+
+    kf = constrain(kf, rules, "act_kv_batch", "act_kv_seq", "act_kv_heads", None)
+    vf = constrain(vf, rules, "act_kv_batch", "act_kv_seq", "act_kv_heads", None)
+
+    if cache is None and impl == "chunked":
+        out = _chunked_attention(q, kf, vf, q_pos, k_pos, scale,
+                                 cfg.attn_softcap, window, chunk)
+    else:
+        out = _naive_attention(q, kf, vf, q_pos, k_pos, scale,
+                               cfg.attn_softcap, window, kv_valid)
+    out = out.reshape(b, sq, kvh * g * hd)
+    return linear(p["o"], out), new_cache
+
+
+def make_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> dict:
+    """Empty KV cache for one attention layer."""
+    kvh, hd = cfg.n_kv_heads, cfg.head_dim_
+    return {
+        "k": jnp.zeros((batch, s_max, kvh, hd), dtype),
+        "v": jnp.zeros((batch, s_max, kvh, hd), dtype),
+        "len": jnp.zeros((), jnp.int32),
+    }
+
+
+# ----------------------------------------------------------------- ffn --
+
+
+def init_dense_ffn(key, cfg: ModelConfig, dtype, d_ff: int | None = None
+                   ) -> tuple[dict, dict]:
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    p, s = {}, {}
+    if cfg.act in ("swiglu", "geglu"):
+        p["wi_gate"], s["wi_gate"] = init_linear(
+            k1, d, ff, dtype, ("d_model", "ffn"))
+        p["wi_up"], s["wi_up"] = init_linear(
+            k2, d, ff, dtype, ("d_model", "ffn"))
+    else:  # relu2 (nemotron squared-ReLU), plain
+        p["wi_up"], s["wi_up"] = init_linear(
+            k1, d, ff, dtype, ("d_model", "ffn"))
+    p["wo"], s["wo"] = init_linear(k3, ff, d, dtype, ("ffn", "d_model"))
+    return p, s
+
+
+def apply_dense_ffn(p, x, act: str):
+    up = linear(p["wi_up"], x)
+    if act == "swiglu":
+        h = jax.nn.silu(linear(p["wi_gate"], x)) * up
+    elif act == "geglu":
+        h = jax.nn.gelu(linear(p["wi_gate"], x), approximate=True) * up
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(up))
+    else:
+        raise ValueError(act)
+    return linear(p["wo"], h)
+
+
+# ----------------------------------------------------------- embedding --
+
+
+def init_embedding(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    p = {"table": _normal(key, (cfg.vocab_size, cfg.d_model),
+                          cfg.d_model, dtype)}
+    s = {"table": ("vocab", "d_model")}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.split(key)[0]
+        p["unembed"] = _normal(k2, (cfg.d_model, cfg.vocab_size),
+                               cfg.d_model, dtype)
+        s["unembed"] = ("d_model", "vocab")
+    return p, s

@@ -1,0 +1,169 @@
+"""Mamba-1 selective SSM layer (Gu & Dao 2023) for the Jamba hybrid.
+
+Training path: causal depthwise conv + *chunked* selective scan — an
+associative scan inside fixed-length chunks with a sequential carry across
+chunks, bounding the live (B, chunk, d_inner, d_state) working set (the
+hybrid's memory-roofline lever). Decode path: O(1) recurrent step with
+carried (conv_state, ssm_state).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _normal
+from repro.models.sharding import ShardingRules, constrain
+
+__all__ = ["init_mamba", "apply_mamba", "make_mamba_state"]
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    d = cfg.d_model
+    m = cfg.mamba
+    di, ds, r = m.inner(d), m.d_state, m.rank(d)
+    ks = jax.random.split(key, 6)
+    p = {
+        "in_proj": _normal(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": _normal(ks[1], (m.d_conv, di), m.d_conv, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": _normal(ks[2], (di, r + 2 * ds), di, dtype),
+        "dt_proj": _normal(ks[3], (r, di), r, dtype),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of ~[1e-3, 1e-1] inits
+            jnp.exp(jax.random.uniform(ks[4], (di,),
+                                       minval=jnp.log(1e-3),
+                                       maxval=jnp.log(1e-1))))).astype(dtype),
+        "A_log": jnp.log(jnp.tile(
+            jnp.arange(1, ds + 1, dtype=jnp.float32), (di, 1))).astype(dtype),
+        "D": jnp.ones((di,), dtype),
+        "out_proj": _normal(ks[5], (di, d), di, dtype),
+    }
+    s = {
+        "in_proj": ("d_model", "ffn"),
+        "conv_w": ("conv_kernel", "ffn"),
+        "conv_b": ("ffn",),
+        "x_proj": ("ffn", None),
+        "dt_proj": (None, "ffn"),
+        "dt_bias": ("ffn",),
+        "A_log": ("ffn", "state"),
+        "D": ("ffn",),
+        "out_proj": ("ffn", "d_model"),
+    }
+    return p, s
+
+
+def _ssm_params(p, u, cfg):
+    """u: (..., di) post-conv activations -> (dt, B, C) selective params."""
+    m = cfg.mamba
+    ds, r = m.d_state, m.rank(cfg.d_model)
+    proj = u @ p["x_proj"]
+    dt_r, b, c = jnp.split(proj, [r, r + ds], axis=-1)
+    dt = jax.nn.softplus(dt_r @ p["dt_proj"] + p["dt_bias"])  # (..., di)
+    return dt, b, c
+
+
+def _chunk_scan(a, b, h0):
+    """Associative scan of h_t = a_t h_{t-1} + b_t within one chunk.
+
+    a, b: (B, c, di, ds); h0: (B, di, ds). Returns (h_all, h_last).
+    """
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_all = a_cum * h0[:, None] + b_cum
+    return h_all, h_all[:, -1]
+
+
+def apply_mamba(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    rules: ShardingRules | None,
+    chunk: int = 256,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """x: (B, S, d). Decode: S == 1 with ``state`` carrying
+    {conv: (B, d_conv-1, di), ssm: (B, di, ds)}."""
+    m = cfg.mamba
+    b_sz, s_len, d = x.shape
+    di, ds = m.inner(d), m.d_state
+    xz = x @ p["in_proj"]
+    xr, z = jnp.split(xz, 2, axis=-1)  # (B,S,di) each
+    xr = constrain(xr, rules, "act_batch", None, "act_ffn")
+
+    a_mat = -jnp.exp(p["A_log"].astype(jnp.float32))  # (di, ds)
+
+    if state is None:
+        # ---- causal depthwise conv (train/prefill) ----
+        pad = jnp.pad(xr, ((0, 0), (m.d_conv - 1, 0), (0, 0)))
+        u = sum(
+            pad[:, i : i + s_len] * p["conv_w"][i]
+            for i in range(m.d_conv)
+        ) + p["conv_b"]
+        u = jax.nn.silu(u)
+        dt, bmat, cmat = _ssm_params(p, u, cfg)
+
+        # ---- chunked selective scan ----
+        n_chunks = -(-s_len // chunk)
+        pad_s = n_chunks * chunk - s_len
+        if pad_s:
+            u_p = jnp.pad(u, ((0, 0), (0, pad_s), (0, 0)))
+            dt_p = jnp.pad(dt, ((0, 0), (0, pad_s), (0, 0)))
+            b_p = jnp.pad(bmat, ((0, 0), (0, pad_s), (0, 0)))
+            c_p = jnp.pad(cmat, ((0, 0), (0, pad_s), (0, 0)))
+        else:
+            u_p, dt_p, b_p, c_p = u, dt, bmat, cmat
+
+        def to_chunks(t):
+            return t.reshape(b_sz, n_chunks, chunk, -1).swapaxes(0, 1)
+
+        uc, dtc, bc, cc = map(to_chunks, (u_p, dt_p, b_p, c_p))
+
+        def body(h0, xs):
+            u_i, dt_i, b_i, c_i = xs
+            dt_f = dt_i.astype(jnp.float32)
+            a_bar = jnp.exp(dt_f[..., None] * a_mat)  # (B,c,di,ds)
+            b_bar = (dt_f * u_i.astype(jnp.float32))[..., None] \
+                * b_i.astype(jnp.float32)[..., None, :]
+            h_all, h_last = _chunk_scan(a_bar, b_bar, h0)
+            y = jnp.einsum("bcds,bcs->bcd", h_all,
+                           c_i.astype(jnp.float32))
+            return h_last, y.astype(x.dtype)
+
+        h0 = jnp.zeros((b_sz, di, ds), jnp.float32)
+        _, ys = jax.lax.scan(body, h0, (uc, dtc, bc, cc))
+        y = ys.swapaxes(0, 1).reshape(b_sz, n_chunks * chunk, di)[:, :s_len]
+        y = y + u * p["D"]
+        new_state = None
+    else:
+        # ---- O(1) decode step ----
+        conv_hist = jnp.concatenate([state["conv"], xr], axis=1)
+        u = jnp.einsum("bkd,kd->bd", conv_hist, p["conv_w"]) + p["conv_b"]
+        u = jax.nn.silu(u)[:, None]  # (B,1,di)
+        dt, bmat, cmat = _ssm_params(p, u, cfg)
+        dt_f = dt[:, 0].astype(jnp.float32)
+        a_bar = jnp.exp(dt_f[..., None] * a_mat)
+        b_bar = (dt_f * u[:, 0].astype(jnp.float32))[..., None] \
+            * bmat[:, 0].astype(jnp.float32)[:, None, :]
+        h = a_bar * state["ssm"] + b_bar
+        y = jnp.einsum("bds,bs->bd", h, cmat[:, 0].astype(jnp.float32))
+        y = (y.astype(x.dtype) + u[:, 0] * p["D"])[:, None]
+        new_state = {"conv": conv_hist[:, 1:], "ssm": h}
+
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return out, new_state
+
+
+def make_mamba_state(cfg: ModelConfig, batch: int, dtype) -> dict:
+    m = cfg.mamba
+    di = m.inner(cfg.d_model)
+    return {
+        "conv": jnp.zeros((batch, m.d_conv - 1, di), dtype),
+        "ssm": jnp.zeros((batch, di, m.d_state), jnp.float32),
+    }

@@ -1,0 +1,138 @@
+"""Mixture-of-experts FFN: shared + fine-grained routed experts
+(DeepSeekMoE / GShard style) with *grouped* sort-based capacity dispatch.
+
+Tokens are partitioned into ``n_groups`` dispatch groups (one per
+data-parallel shard at scale) and each group routes into its own
+``(E, C_g)`` capacity buffer — so every intermediate is group-local and
+the data->expert re-layout becomes an all-to-all between the group-sharded
+buffers and the expert-sharded per-expert matmuls under GSPMD.
+
+Dispatch is scatter/gather-based (no one-hot dispatch einsum), keeping the
+HLO FLOP count equal to *active-expert* compute — so the roofline's
+MODEL_FLOPS/HLO_FLOPs ratio stays honest.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _normal, apply_dense_ffn, init_dense_ffn
+from repro.models.sharding import ShardingRules, constrain
+
+__all__ = ["init_moe", "apply_moe"]
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    moe = cfg.moe
+    d, de, e = cfg.d_model, moe.d_expert, moe.n_experts
+    kr, kg, ku, ko, ks = jax.random.split(key, 5)
+    p = {
+        "router": _normal(kr, (d, e), d, jnp.float32),
+        "wi_gate": _normal(kg, (e, d, de), d, dtype),
+        "wi_up": _normal(ku, (e, d, de), d, dtype),
+        "wo": _normal(ko, (e, de, d), de, dtype),
+    }
+    s = {
+        "router": ("d_model", None),
+        "wi_gate": ("experts", "d_model", "expert_ffn"),
+        "wi_up": ("experts", "d_model", "expert_ffn"),
+        "wo": ("experts", "expert_ffn", "d_model"),
+    }
+    if moe.n_shared:
+        p["shared"], s["shared"] = init_dense_ffn(
+            ks, cfg, dtype, d_ff=moe.n_shared * de)
+    return p, s
+
+
+def _group_dispatch(xg, gate, idx, e: int, cap: int):
+    """One group's dispatch. xg: (Tg, d); gate/idx: (Tg, k).
+
+    Returns (buf (e, cap, d), dest (Tg*k,), token_of (Tg*k,), keep)."""
+    tg, d = xg.shape
+    k = idx.shape[-1]
+    flat_e = idx.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    token_of = order // k
+    starts = jnp.searchsorted(sorted_e, jnp.arange(e), side="left")
+    pos = jnp.arange(tg * k, dtype=jnp.int32) - starts[sorted_e]
+    keep = pos < cap
+    dest = jnp.where(keep, sorted_e * cap + pos, e * cap)
+    buf = jnp.zeros((e * cap + 1, d), xg.dtype).at[dest].set(xg[token_of])
+    gates = jnp.where(keep, gate.reshape(-1)[order], 0.0)
+    return buf[: e * cap].reshape(e, cap, d), dest, token_of, gates
+
+
+def _group_combine(y, dest, token_of, gates, tg: int):
+    """Gather expert outputs back + gate-weighted scatter-add to tokens."""
+    e_cap, d = y.shape[0] * y.shape[1], y.shape[2]
+    y_flat = jnp.concatenate([y.reshape(e_cap, d),
+                              jnp.zeros((1, d), y.dtype)])
+    contrib = y_flat[dest] * gates.astype(y.dtype)[:, None]
+    return jnp.zeros((tg, d), y.dtype).at[token_of].add(contrib)
+
+
+def apply_moe(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    rules: ShardingRules | None,
+    n_groups: int = 1,
+    capacity_factor: float = 0.0,
+) -> tuple[jax.Array, jax.Array]:
+    """Routed-expert FFN. x: (B, S, d). Returns (out, aux_loss)."""
+    moe = cfg.moe
+    cf = capacity_factor or moe.capacity_factor
+    b, s, d = x.shape
+    t = b * s
+    e, k = moe.n_experts, moe.top_k
+    g = n_groups if t % n_groups == 0 else 1
+    tg = t // g
+    xf = x.reshape(t, d)
+
+    logits = xf.astype(jnp.float32) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, k)  # (T, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # Switch-style load-balance auxiliary loss.
+    density = jnp.mean(
+        jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    router_mean = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(density * router_mean)
+
+    # group-local capacity, padded so the capacity dim shards over DP axes
+    cap = int(math.ceil(tg * k / e * cf))
+    cap = max(8, -(-cap // 8) * 8)
+
+    xg = xf.reshape(g, tg, d)
+    gate_g = gate.reshape(g, tg, k)
+    idx_g = idx.reshape(g, tg, k)
+    xg = constrain(xg, rules, "act_moe_group", None, None)
+
+    buf, dest, token_of, gates = jax.vmap(
+        lambda xx, gg, ii: _group_dispatch(xx, gg, ii, e, cap)
+    )(xg, gate_g, idx_g)
+    # (g, e, cap, d): group dim over DP, expert dim over EP — the re-layout
+    # between these two shardings is GSPMD's all-to-all.
+    buf = constrain(buf, rules, "act_moe_group", "act_experts", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi_gate"])
+    u = jnp.einsum("gecd,edf->gecf", buf, p["wi_up"])
+    y = jnp.einsum("gecf,efd->gecd", jax.nn.silu(h) * u, p["wo"])
+    y = constrain(y, rules, "act_moe_group", "act_experts", None, None)
+
+    out = jax.vmap(
+        lambda yy, dd, tt, gg: _group_combine(yy, dd, tt, gg, tg)
+    )(y, dest, token_of, gates)
+    out = constrain(out, rules, "act_moe_group", None, None)
+    out = out.reshape(t, d)
+
+    if moe.n_shared:
+        out = out + apply_dense_ffn(p["shared"], xf, cfg.act)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,302 @@
+"""xLSTM blocks (Beck et al. 2024): mLSTM (matrix memory, chunkwise-
+parallel) and sLSTM (scalar memory, exponential gating, sequential scan).
+
+mLSTM uses the chunkwise-recurrent form: per chunk a quadratic intra-chunk
+attention-like term plus an inter-chunk contribution from the carried
+(C, n, m) state — the stabilized exponential-gating arithmetic follows the
+paper's max-state trick. sLSTM is a per-head recurrent cell scanned over
+the sequence (it is 1 of 8 layers in the xLSTM[7:1] pattern, so the
+sequential scan is off the critical path).
+
+Both blocks embed their own channel mixing (the configs set d_ff = 0).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import _normal, apply_norm, init_norm
+from repro.models.sharding import ShardingRules, constrain
+
+__all__ = [
+    "init_mlstm", "apply_mlstm", "make_mlstm_state",
+    "init_slstm", "apply_slstm", "make_slstm_state",
+]
+
+
+# ------------------------------------------------------------- mLSTM ----
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    hd = di // nh
+    assert nh * hd == di
+    ks = jax.random.split(key, 8)
+    p = {
+        "up": _normal(ks[0], (d, 2 * di), d, dtype),
+        "q": _normal(ks[1], (di, di), di, dtype),
+        "k": _normal(ks[2], (di, di), di, dtype),
+        "v": _normal(ks[3], (di, di), di, dtype),
+        "wi": _normal(ks[4], (di, nh), di, jnp.float32),  # input gate
+        "wf": _normal(ks[5], (di, nh), di, jnp.float32),  # forget gate
+        "bi": jnp.zeros((nh,), jnp.float32),
+        "bf": jnp.full((nh,), 3.0, jnp.float32),  # forget-open init
+        "gn": jnp.ones((di,), dtype),              # multi-head norm
+        "down": _normal(ks[6], (di, d), di, dtype),
+    }
+    s = {
+        "up": ("d_model", "ffn"), "q": ("ffn", "ffn"), "k": ("ffn", "ffn"),
+        "v": ("ffn", "ffn"), "wi": ("ffn", "heads"), "wf": ("ffn", "heads"),
+        "bi": ("heads",), "bf": ("heads",), "gn": ("ffn",),
+        "down": ("ffn", "d_model"),
+    }
+    return p, s
+
+
+def _mh_norm(x, w, nh):
+    """Head-wise RMS norm of (B, S, di) viewed as (B, S, nh, hd)."""
+    b, s_len, di = x.shape
+    xh = x.reshape(b, s_len, nh, di // nh).astype(jnp.float32)
+    xh = xh * jax.lax.rsqrt(jnp.mean(xh**2, axis=-1, keepdims=True) + 1e-6)
+    return (xh.reshape(b, s_len, di) * w).astype(x.dtype)
+
+
+def apply_mlstm(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    rules: ShardingRules | None,
+    chunk: int = 256,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """x: (B, S, d). Decode (S == 1): carried {C, n, m} per head."""
+    d = cfg.d_model
+    di = int(cfg.mlstm_proj_factor * d)
+    nh = cfg.n_heads
+    hd = di // nh
+    b, s_len, _ = x.shape
+
+    a, z = jnp.split(x @ p["up"], 2, axis=-1)  # (B,S,di) x2
+    a = constrain(a, rules, "act_batch", None, "act_ffn")
+    q = (a @ p["q"]).reshape(b, s_len, nh, hd) / math.sqrt(hd)
+    k = (a @ p["k"]).reshape(b, s_len, nh, hd)
+    v = (a @ p["v"]).reshape(b, s_len, nh, hd)
+    af = a.astype(jnp.float32)
+    i_pre = af @ p["wi"] + p["bi"]  # (B,S,nh)
+    f_pre = af @ p["wf"] + p["bf"]
+    logf = jax.nn.log_sigmoid(f_pre)
+
+    if state is None:
+        n_chunks = -(-s_len // chunk)
+        pad = n_chunks * chunk - s_len
+        if pad:
+            q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            i_pre = jnp.pad(i_pre, ((0, 0), (0, pad), (0, 0)),
+                            constant_values=-1e9)
+            logf = jnp.pad(logf, ((0, 0), (0, pad), (0, 0)))
+
+        def to_chunks(t):
+            return t.reshape((b, n_chunks, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+        qc, kc, vc, ic, fc = map(to_chunks, (q, k, v, i_pre, logf))
+
+        def body(carry, xs):
+            c_st, n_st, m_st = carry  # (B,nh,hd,hd), (B,nh,hd), (B,nh)
+            q_i, k_i, v_i, ii, ff = xs
+            # cumulative log-forget within the chunk (inclusive)
+            fcum = jnp.cumsum(ff, axis=1)  # (B,c,nh)
+            # intra-chunk decay: D[t,s] = fcum_t - fcum_s + i_s  (s <= t)
+            dmat = (fcum[:, :, None] - fcum[:, None, :]
+                    + ii[:, None, :, :])  # (B,t,s,nh)
+            tri = jnp.tril(jnp.ones((dmat.shape[1], dmat.shape[2]), bool))
+            dmat = jnp.where(tri[None, :, :, None], dmat, -jnp.inf)
+            # inter-chunk: state contribution decayed by fcum_t, with m_st
+            m_intra = jnp.max(dmat, axis=2)  # (B,t,nh)
+            m_inter = fcum + m_st[:, None]
+            m_new = jnp.maximum(m_intra, m_inter)
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+
+            w_intra = jnp.exp(dmat - m_safe[:, :, None])  # (B,t,s,nh)
+            scores = jnp.einsum("bthd,bshd->btsh", q_i, k_i,
+                                preferred_element_type=jnp.float32)
+            num_intra = jnp.einsum("btsh,bshd->bthd",
+                                   scores * w_intra, v_i.astype(jnp.float32))
+            # denominator per the paper: (sum_s weights * q.k) per head
+            den_intra = jnp.einsum(
+                "btsh,bsh->bth", scores * w_intra,
+                jnp.ones(v_i.shape[:3], jnp.float32))
+
+            w_inter = jnp.exp(m_inter - m_safe)  # (B,t,nh)
+            num_inter = jnp.einsum("bthd,bhde->bthe", q_i.astype(jnp.float32),
+                                   c_st) * w_inter[..., None]
+            den_inter = jnp.einsum("bthd,bhd->bth", q_i.astype(jnp.float32),
+                                   n_st) * w_inter
+
+            denom = jnp.maximum(
+                jnp.abs(den_intra + den_inter), jnp.exp(-m_safe)) + 1e-6
+            h = (num_intra + num_inter) / denom[..., None]
+
+            # ---- state update to end of chunk ----
+            f_tot = fcum[:, -1]  # (B,nh)
+            # per-position decay to chunk end: fcum_end - fcum_s + i_s
+            dend = f_tot[:, None] - fcum + ii  # (B,c,nh)
+            m_next = jnp.maximum(f_tot + m_st, jnp.max(dend, axis=1))
+            w_upd = jnp.exp(dend - m_next[:, None])  # (B,c,nh)
+            c_new = (c_st * jnp.exp(f_tot + m_st - m_next)[..., None, None]
+                     + jnp.einsum("bshd,bshe,bsh->bhde",
+                                  k_i.astype(jnp.float32),
+                                  v_i.astype(jnp.float32), w_upd))
+            n_new = (n_st * jnp.exp(f_tot + m_st - m_next)[..., None]
+                     + jnp.einsum("bshd,bsh->bhd",
+                                  k_i.astype(jnp.float32), w_upd))
+            return (c_new, n_new, m_next), h.astype(x.dtype)
+
+        c0 = jnp.zeros((b, nh, hd, hd), jnp.float32)
+        n0 = jnp.zeros((b, nh, hd), jnp.float32)
+        m0 = jnp.full((b, nh), -1e30, jnp.float32)
+        _, hs = jax.lax.scan(body, (c0, n0, m0), (qc, kc, vc, ic, fc))
+        h = hs.swapaxes(0, 1).reshape(b, n_chunks * chunk, nh, hd)[:, :s_len]
+        new_state = None
+    else:
+        # ---- O(1) decode ----
+        c_st, n_st, m_st = state["C"], state["n"], state["m"]
+        ii, ff = i_pre[:, 0], logf[:, 0]  # (B,nh)
+        m_new = jnp.maximum(ff + m_st, ii)
+        c_new = (c_st * jnp.exp(ff + m_st - m_new)[..., None, None]
+                 + jnp.exp(ii - m_new)[..., None, None]
+                 * jnp.einsum("bhd,bhe->bhde", k[:, 0].astype(jnp.float32),
+                              v[:, 0].astype(jnp.float32)))
+        n_new = (n_st * jnp.exp(ff + m_st - m_new)[..., None]
+                 + jnp.exp(ii - m_new)[..., None] * k[:, 0].astype(jnp.float32))
+        qf = q[:, 0].astype(jnp.float32)
+        num = jnp.einsum("bhd,bhde->bhe", qf, c_new)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)),
+                          jnp.exp(-jnp.where(jnp.isfinite(m_new), m_new, 0.0)))
+        h = (num / (den[..., None] + 1e-6))[:, None].reshape(
+            b, 1, nh, hd).astype(x.dtype)
+        new_state = {"C": c_new, "n": n_new, "m": m_new}
+
+    h = _mh_norm(h.reshape(b, -1, di), p["gn"], nh)
+    out = (h * jax.nn.silu(z)) @ p["down"]
+    return out, new_state
+
+
+def make_mlstm_state(cfg: ModelConfig, batch: int) -> dict:
+    di = int(cfg.mlstm_proj_factor * cfg.d_model)
+    nh = cfg.n_heads
+    hd = di // nh
+    return {
+        "C": jnp.zeros((batch, nh, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, nh, hd), jnp.float32),
+        "m": jnp.full((batch, nh), -1e30, jnp.float32),
+    }
+
+
+# ------------------------------------------------------------- sLSTM ----
+
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> tuple[dict, dict]:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    dp = int(cfg.slstm_proj_factor * d)
+    ks = jax.random.split(key, 6)
+
+    def gatep(k):
+        return {
+            "w": _normal(k, (d, d), d, jnp.float32),
+            "r": _normal(jax.random.fold_in(k, 1), (nh, hd, hd), hd,
+                         jnp.float32),
+            "b": jnp.zeros((d,), jnp.float32),
+        }
+
+    p = {
+        "z": gatep(ks[0]), "i": gatep(ks[1]),
+        "f": gatep(ks[2]), "o": gatep(ks[3]),
+        "gn": jnp.ones((d,), dtype),
+        "up_gate": _normal(ks[4], (d, dp), d, dtype),
+        "up": _normal(jax.random.fold_in(ks[4], 1), (d, dp), d, dtype),
+        "down": _normal(ks[5], (dp, d), dp, dtype),
+    }
+    p["f"]["b"] = jnp.full((d,), 3.0, jnp.float32)
+    gs = {"w": ("d_model", "d_model"), "r": ("heads", None, None),
+          "b": ("d_model",)}
+    s = {
+        "z": gs, "i": gs, "f": gs, "o": gs, "gn": ("d_model",),
+        "up_gate": ("d_model", "ffn"), "up": ("d_model", "ffn"),
+        "down": ("ffn", "d_model"),
+    }
+    return p, s
+
+
+def apply_slstm(
+    p: dict,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    rules: ShardingRules | None,
+    state: dict | None = None,
+) -> tuple[jax.Array, dict | None]:
+    """Sequential sLSTM with exponential gating + stabilizer state.
+
+    States per head-dim: c (cell), n (normalizer), m (stabilizer), h.
+    """
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    b, s_len, _ = x.shape
+    xf = x.astype(jnp.float32)
+
+    pre = {g: xf @ p[g]["w"] + p[g]["b"] for g in ("z", "i", "f", "o")}
+
+    def step(carry, xs):
+        c, n, m, h = carry  # (B, d) f32 each; h feeds recurrent term
+        hh = h.reshape(b, nh, hd)
+
+        def rec(g):
+            return jnp.einsum("bhd,hde->bhe", hh, p[g]["r"]).reshape(b, d)
+
+        z = jnp.tanh(xs["z"] + rec("z"))
+        o = jax.nn.sigmoid(xs["o"] + rec("o"))
+        i_t = xs["i"] + rec("i")
+        f_t = jax.nn.log_sigmoid(xs["f"] + rec("f"))
+        m_new = jnp.maximum(f_t + m, i_t)
+        ig = jnp.exp(i_t - m_new)
+        fg = jnp.exp(f_t + m - m_new)
+        c_new = fg * c + ig * z
+        n_new = fg * n + ig
+        h_new = o * c_new / (n_new + 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    zeros = jnp.zeros((b, d), jnp.float32)
+    if state is None:
+        carry0 = (zeros, zeros, jnp.full((b, d), -1e30), zeros)
+    else:
+        carry0 = (state["c"], state["n"], state["m"], state["h"])
+    xs_seq = {g: pre[g].swapaxes(0, 1) for g in pre}  # (S,B,d)
+    carry, hs = jax.lax.scan(step, carry0, xs_seq)
+    h = hs.swapaxes(0, 1).astype(x.dtype)  # (B,S,d)
+
+    h = apply_norm({"w": p["gn"]}, h, "rmsnorm")
+    up = h @ p["up"]
+    out = (jax.nn.gelu(h @ p["up_gate"], approximate=True) * up) @ p["down"]
+    new_state = None
+    if state is not None:
+        c, n, m, hlast = carry
+        new_state = {"c": c, "n": n, "m": m, "h": hlast}
+    return out, new_state
+
+
+def make_slstm_state(cfg: ModelConfig, batch: int) -> dict:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, d), -1e30), "h": z}

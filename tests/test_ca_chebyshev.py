@@ -1,0 +1,60 @@
+"""Communication-avoiding Chebyshev schedule == dense oracle (multi-device
+subprocess: forces 8 host devices)."""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import chebyshev, graph, multipliers
+from repro.core.distributed import grid_cheb_apply_ca, grid_slab_matvec
+
+mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+side, F = 32, 4
+g = graph.grid_graph(side)
+lap = np.asarray(g.laplacian())
+for order in (3, 11, 20):
+    coeffs = chebyshev.cheb_coefficients(
+        [multipliers.tikhonov(1.0, 1), multipliers.heat(0.5)], order, 8.0)
+    f = np.random.RandomState(order).randn(side * side, F).astype(np.float32)
+    ref = chebyshev.cheb_apply_dense(
+        jnp.asarray(lap, jnp.float32), jnp.asarray(f), coeffs, 8.0)
+    for depth in (1, 2, 3, 4):
+        def ca(f_loc, depth=depth, coeffs=coeffs):
+            return grid_cheb_apply_ca(
+                f_loc, jnp.asarray(coeffs, jnp.float32), 8.0, side=side,
+                axis_names=("x",), n_parts=8, depth=depth)
+        out = jax.jit(jax.shard_map(
+            ca, mesh=mesh, in_specs=(P("x"),), out_specs=P(None, "x")))(f)
+        err = float(np.max(np.abs(np.asarray(out) - np.asarray(ref))))
+        assert err < 5e-6, (order, depth, err)
+        print(f"order={order} depth={depth} err={err:.2e}")
+# per-order stencil halo (Algorithm 1) also matches
+def base(f_loc):
+    mv = lambda v: grid_slab_matvec(v, side=side, axis_names=("x",),
+                                    n_parts=8)
+    return chebyshev.cheb_apply(mv, f_loc, jnp.asarray(coeffs, jnp.float32),
+                                8.0)
+out = jax.jit(jax.shard_map(
+    base, mesh=mesh, in_specs=(P("x"),), out_specs=P(None, "x")))(f)
+assert float(np.max(np.abs(np.asarray(out) - np.asarray(ref)))) < 5e-6
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_ca_chebyshev_matches_oracle():
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    proc = subprocess.run([sys.executable, "-c", SCRIPT],
+                          capture_output=True, text=True, env=env,
+                          timeout=900)
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    assert "OK" in proc.stdout

@@ -1,0 +1,139 @@
+"""Core Chebyshev machinery vs the exact eigendecomposition oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chebyshev, graph, multipliers, operators
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_scope():
+    """Enable x64 for this module only (restored afterwards so int32
+    serving / bf16 smoke tests in the same process are unaffected)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+
+@pytest.fixture(scope="module")
+def sensor():
+    # Paper density (n=500, r=0.075) scaled to n=120: r ~ 0.075*sqrt(500/120).
+    return graph.connected_sensor_graph(
+        jax.random.PRNGKey(0), n=120, sigma=0.15, kappa=0.155)
+
+
+@pytest.fixture(scope="module")
+def lap(sensor):
+    return np.asarray(sensor.laplacian(), dtype=np.float64)
+
+
+def test_lmax_bound_dominates_spectrum(sensor, lap):
+    lam = np.linalg.eigvalsh(lap)
+    bound = float(sensor.lmax_bound())
+    assert lam[-1] <= bound + 1e-9
+    # Anderson-Morley is within 2x of the true lmax for these graphs.
+    assert bound <= 2.5 * lam[-1]
+
+
+def test_power_iteration_bound(lap):
+    lam = np.linalg.eigvalsh(lap)[-1]
+    est = float(graph.lmax_power_iteration(jnp.asarray(lap), iters=200))
+    assert lam <= est <= 1.1 * lam
+
+
+def test_coefficients_match_known_series():
+    # g(x) = x on [0, 2] -> y = x - 1 on [-1,1]: T_1 coefficient 1, c0 = 2
+    # (because x = 1 + y = c0/2 * T0 + c1 T1 with c0 = 2, c1 = 1).
+    c = chebyshev.cheb_coefficients([lambda x: x], order=5, lmax=2.0)
+    np.testing.assert_allclose(c[0, 0], 2.0, atol=1e-12)
+    np.testing.assert_allclose(c[0, 1], 1.0, atol=1e-12)
+    np.testing.assert_allclose(c[0, 2:], 0.0, atol=1e-12)
+
+
+def test_cheb_eval_roundtrip():
+    lmax = 7.3
+    g = multipliers.heat(0.7)
+    c = chebyshev.cheb_coefficients([g], order=40, lmax=lmax)
+    x = np.linspace(0, lmax, 257)
+    np.testing.assert_allclose(chebyshev.cheb_eval(c[0], x, lmax), g(x), atol=1e-9)
+
+
+@pytest.mark.parametrize("mult,order,tol", [
+    (multipliers.heat(1.0), 30, 1e-6),
+    (multipliers.tikhonov(1.0, 1), 40, 1e-3),
+    (multipliers.tikhonov(2.0, 2), 60, 1e-3),
+])
+def test_apply_converges_to_oracle(sensor, lap, mult, order, tol):
+    lmax = float(sensor.lmax_bound())
+    op = operators.UnionFilterOperator.from_multipliers([mult], order, lmax)
+    f = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (lap.shape[0],)))
+    exact = operators.exact_union_apply(lap, [mult], f)
+    approx = op.apply_dense(jnp.asarray(lap), jnp.asarray(f))
+    err = np.max(np.abs(np.asarray(approx) - exact)) / np.max(np.abs(exact))
+    assert err < tol, f"relative error {err}"
+
+
+def test_union_shares_recurrence_and_matches_stacked(sensor, lap):
+    lmax = float(sensor.lmax_bound())
+    bank = [multipliers.heat(0.5), multipliers.heat(2.0), multipliers.tikhonov()]
+    op = operators.UnionFilterOperator.from_multipliers(bank, 30, lmax)
+    f = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (lap.shape[0],)))
+    out = np.asarray(op.apply_dense(jnp.asarray(lap), jnp.asarray(f)))
+    assert out.shape == (3, lap.shape[0])
+    for j, g in enumerate(bank):
+        single = operators.UnionFilterOperator.from_multipliers([g], 30, lmax)
+        np.testing.assert_allclose(
+            out[j], np.asarray(single.apply_dense(jnp.asarray(lap), jnp.asarray(f)))[0],
+            atol=1e-10)
+
+
+def test_adjoint_inner_product_identity(sensor, lap):
+    # <Phi~ f, a> == <f, Phi~* a> exactly (same polynomial, symmetric L).
+    lmax = float(sensor.lmax_bound())
+    bank = multipliers.sgwt_filter_bank(lmax, n_scales=3)
+    op = operators.UnionFilterOperator.from_multipliers(bank, 25, lmax)
+    n = lap.shape[0]
+    f = jax.random.normal(jax.random.PRNGKey(3), (n,))
+    a = jax.random.normal(jax.random.PRNGKey(4), (op.eta, n))
+    lhs = jnp.vdot(op.apply_dense(jnp.asarray(lap), f), a)
+    rhs = jnp.vdot(f, op.adjoint_dense(jnp.asarray(lap), a))
+    np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-10)
+
+
+def test_gram_identity_matches_composition(sensor, lap):
+    # Phi~* Phi~ f via degree-2M product coefficients == adjoint(apply(f)).
+    lmax = float(sensor.lmax_bound())
+    bank = multipliers.sgwt_filter_bank(lmax, n_scales=2)
+    op = operators.UnionFilterOperator.from_multipliers(bank, 20, lmax)
+    f = jax.random.normal(jax.random.PRNGKey(5), (lap.shape[0],))
+    composed = op.adjoint_dense(jnp.asarray(lap), op.apply_dense(jnp.asarray(lap), f))
+    direct = op.gram_apply_dense(jnp.asarray(lap), f)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(composed), atol=1e-8)
+
+
+def test_product_coefficients_identity():
+    # (T-series of g)^2 evaluated == (g evaluated)^2 for a generic series.
+    rng = np.random.RandomState(0)
+    c = rng.randn(8)
+    d = chebyshev.product_coefficients(c, c)
+    x = np.linspace(0, 3.0, 101)
+    p = chebyshev.cheb_eval(c, x, 3.0)
+    q = chebyshev.cheb_eval(d, x, 3.0)
+    np.testing.assert_allclose(q, p**2, atol=1e-10)
+
+
+def test_batched_signals(sensor, lap):
+    lmax = float(sensor.lmax_bound())
+    op = operators.UnionFilterOperator.from_multipliers([multipliers.heat(1.0)], 25, lmax)
+    f = jax.random.normal(jax.random.PRNGKey(6), (lap.shape[0], 5))
+    out = op.apply_dense(jnp.asarray(lap), f)
+    assert out.shape == (1, lap.shape[0], 5)
+    for i in range(5):
+        single = op.apply_dense(jnp.asarray(lap), f[:, i])
+        np.testing.assert_allclose(np.asarray(out[0, :, i]), np.asarray(single[0]),
+                                   atol=1e-10)

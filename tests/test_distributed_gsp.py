@@ -1,0 +1,103 @@
+"""Distributed operator application + gossip consensus.
+
+Multi-device behaviour is exercised by subprocess-running the example
+drivers (they force 8 host devices, which must not leak into this process —
+see the dry-run guidance). Host-side partition-plan invariants are tested
+in-process.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import gossip, graph
+from repro.core.distributed import build_partition_plan, plan_row_slabs
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _run_example(name: str) -> str:
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "examples" / name)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, f"{name} failed:\n{proc.stdout}\n{proc.stderr}"
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_distributed_denoising_example_matches_centralized():
+    out = _run_example("distributed_denoising.py")
+    assert "OK" in out
+
+
+@pytest.mark.slow
+def test_gossip_consensus_example_tracks_bound():
+    out = _run_example("gossip_consensus.py")
+    assert "OK" in out
+
+
+def test_partition_plan_reassembles_laplacian():
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(1), n=96,
+                                     sigma=0.17, kappa=0.18)
+    for n_parts in (2, 4, 8):
+        plan = build_partition_plan(g.adjacency, g.coords, n_parts)
+        slabs = np.asarray(plan_row_slabs(plan))
+        full = slabs.reshape(-1, slabs.shape[-1])  # (N_pad, N_pad)
+        lap = np.asarray(g.laplacian())
+        order = plan.order
+        expect = np.zeros_like(full)
+        expect[: g.n_vertices, : g.n_vertices] = lap[np.ix_(order, order)]
+        np.testing.assert_allclose(full, expect, atol=1e-6)
+
+
+def test_partition_order_is_permutation():
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(2), n=100,
+                                     sigma=0.17, kappa=0.18)
+    plan = build_partition_plan(g.adjacency, g.coords, 4)
+    assert sorted(plan.order.tolist()) == list(range(100))
+
+
+def test_halo_words_bounded_by_radio_model():
+    # halo words <= 2|E|: a boundary value goes once per neighbouring
+    # partition, never more than once per incident edge.
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(3), n=128,
+                                     sigma=0.16, kappa=0.17)
+    for n_parts in (2, 4, 8, 16):
+        plan = build_partition_plan(g.adjacency, g.coords, n_parts)
+        assert plan.halo_words <= 2 * g.n_edges
+
+
+def test_consensus_polynomial_properties():
+    lam1, lmax = gossip.ring_spectrum_bounds(16)
+    for order in (4, 10, 20):
+        c = gossip.consensus_coefficients(order, lam1, lmax)
+        from repro.core import chebyshev
+        # p(0) = 1: the mean is preserved exactly.
+        p0 = chebyshev.cheb_eval(c[0], np.array([0.0]), lmax)[0]
+        np.testing.assert_allclose(p0, 1.0, atol=1e-9)
+        # |p| <= contraction bound on [lam1, lmax].
+        xs = np.linspace(lam1, lmax, 2001)
+        bound = gossip.consensus_contraction(order, lam1, lmax)
+        assert np.max(np.abs(chebyshev.cheb_eval(c[0], xs, lmax))) <= bound * 1.01
+
+
+def test_required_order_scaling():
+    # Chebyshev acceleration: M grows ~linearly in P (vs P^2 unaccelerated).
+    m8 = gossip.required_order(8, 1e-3)
+    m16 = gossip.required_order(16, 1e-3)
+    m32 = gossip.required_order(32, 1e-3)
+    assert m8 < m16 < m32
+    assert m32 <= 4.2 * m8  # sub-quadratic growth
+
+
+@pytest.mark.slow
+def test_distributed_wavelet_ista_example():
+    """Full Sec. V-C pipeline on the mesh == centralized to fp32 eps."""
+    out = _run_example("distributed_wavelet_ista.py")
+    assert "OK" in out

@@ -1,0 +1,91 @@
+"""Unit tests for the trip-count-weighted HLO analyzer against programs
+with known FLOP/collective counts."""
+
+import re
+
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import Hardware, roofline_terms
+from repro.launch.hlo_weighted import analyze_hlo
+
+
+def _wrap(entry_body: str, extra: str = "") -> str:
+    return f"""HloModule test
+{extra}
+ENTRY %main.1 (p0: f32[128,128]) -> f32[128,128] {{
+{entry_body}
+}}
+"""
+
+
+def test_dot_flops_counted():
+    text = _wrap(
+        "  %p0 = f32[128,128]{1,0} parameter(0)\n"
+        "  ROOT %dot.1 = f32[128,128]{1,0} dot(%p0, %p0), "
+        "lhs_contracting_dims={1}, rhs_contracting_dims={0}\n")
+    res = analyze_hlo(text)
+    assert res.matmul_flops == 2 * 128 * 128 * 128
+
+
+def test_while_trip_count_weighting():
+    extra = """%cond.1 (a: (s32[], f32[128,128])) -> pred[] {
+  %a = (s32[], f32[128,128]) parameter(0)
+  %gte = s32[] get-tuple-element(%a), index=0
+  %c = s32[] constant(17)
+  ROOT %lt = pred[] compare(%gte, %c), direction=LT
+}
+%body.1 (b: (s32[], f32[128,128])) -> (s32[], f32[128,128]) {
+  %b = (s32[], f32[128,128]) parameter(0)
+  %x = f32[128,128]{1,0} get-tuple-element(%b), index=1
+  %i = s32[] get-tuple-element(%b), index=0
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  %d = f32[128,128]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  ROOT %t = (s32[], f32[128,128]) tuple(%i2, %d)
+}"""
+    body = (
+        "  %p0 = f32[128,128]{1,0} parameter(0)\n"
+        "  %zero = s32[] constant(0)\n"
+        "  %init = (s32[], f32[128,128]) tuple(%zero, %p0)\n"
+        "  %w = (s32[], f32[128,128]) while(%init), condition=%cond.1, "
+        "body=%body.1\n"
+        "  ROOT %out = f32[128,128]{1,0} get-tuple-element(%w), index=1\n")
+    res = analyze_hlo(_wrap(body, extra))
+    assert res.while_trip_counts == [17]
+    assert res.matmul_flops == 17 * 2 * 128**3
+
+
+def test_collective_bytes_and_width_cap():
+    body = (
+        "  %p0 = f32[128,128]{1,0} parameter(0)\n"
+        "  ROOT %ar = f32[128,128]{1,0} all-reduce(%p0), "
+        "replica_groups={}\n")
+    res = analyze_hlo(_wrap(body))
+    assert res.collective_bytes["all-reduce"] == 128 * 128 * 4
+    res2 = analyze_hlo(_wrap(body), activation_width=2)
+    assert res2.collective_bytes["all-reduce"] == 128 * 128 * 2
+
+
+def test_dynamic_update_slice_counts_update_only():
+    body = (
+        "  %p0 = f32[128,128]{1,0} parameter(0)\n"
+        "  %idx = s32[] constant(0)\n"
+        "  %upd = f32[1,128]{1,0} slice(%p0), slice={[0:1], [0:128]}\n"
+        "  ROOT %dus = f32[128,128]{1,0} dynamic-update-slice(%p0, %upd, "
+        "%idx, %idx)\n")
+    res = analyze_hlo(_wrap(body))
+    # slice: 2x out (2*512) + DUS: 2x update (2*512)
+    assert res.hbm_bytes == pytest.approx(4 * 1 * 128 * 4)
+
+
+def test_roofline_terms_bottleneck():
+    hw = Hardware(peak_flops=1e12, hbm_bw=1e9, ici_bw=1e8)
+    t = roofline_terms(2e12, 1e9, {"all-reduce": 0}, n_chips=4, hw=hw,
+                       model_flops=4e12)
+    assert t["compute_s"] == 2.0
+    assert t["memory_s"] == 1.0
+    assert t["bottleneck"] == "compute"
+    # ideal = 4e12/(4*1e12) = 1s; bound = 2s -> fraction 0.5
+    assert t["roofline_fraction"] == pytest.approx(0.5)
+    assert t["useful_flop_ratio"] == pytest.approx(0.5)

@@ -1,0 +1,157 @@
+"""Hypothesis property tests on the system's core invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import chebyshev, gossip, graph, multipliers
+from repro.core.operators import UnionFilterOperator, exact_union_apply
+
+import pytest
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _x64_scope():
+    """Enable x64 for this module only (restored afterwards so int32
+    serving / bf16 smoke tests in the same process are unaffected)."""
+    old = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    yield
+    jax.config.update("jax_enable_x64", old)
+
+
+settings = hypothesis.settings(max_examples=15, deadline=None)
+
+
+@settings
+@hypothesis.given(
+    n=st.integers(16, 60),
+    seed=st.integers(0, 2**30),
+    t=st.floats(0.1, 3.0),
+)
+def test_heat_filter_converges_to_oracle(n, seed, t):
+    """Phi~ -> Phi as M grows, for arbitrary connected random graphs."""
+    key = jax.random.PRNGKey(seed)
+    # Erdos-Renyi-ish random graph, forced connected via a ring backbone.
+    a = (jax.random.uniform(key, (n, n)) < 0.15).astype(jnp.float64)
+    a = jnp.triu(a, 1)
+    a = a + a.T
+    ring = np.zeros((n, n))
+    idx = np.arange(n)
+    ring[idx, (idx + 1) % n] = ring[(idx + 1) % n, idx] = 1.0
+    a = jnp.maximum(a, jnp.asarray(ring))
+    lap = graph.laplacian(a)
+    lmax = float(graph.lmax_upper_bound(a))
+    f = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    mult = multipliers.heat(t)
+    exact = exact_union_apply(np.asarray(lap), [mult], np.asarray(f))[0]
+    errs = []
+    for order in (5, 40):
+        op = UnionFilterOperator.from_multipliers([mult], order, lmax)
+        approx = np.asarray(op.apply_dense(lap, f))[0]
+        errs.append(np.max(np.abs(approx - exact)))
+    assert errs[1] < 1e-6 or errs[1] < errs[0] * 1e-2
+
+
+@settings
+@hypothesis.given(
+    seed=st.integers(0, 2**30),
+    order=st.integers(3, 30),
+    eta=st.integers(1, 4),
+)
+def test_adjoint_identity_random_filters(seed, order, eta):
+    """<Phi~ f, a> == <f, Phi~* a> for random polynomial filters."""
+    rng = np.random.RandomState(seed)
+    n = 40
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(seed % 97), n=n,
+                                     sigma=0.3, kappa=0.35)
+    lap = g.laplacian()
+    lmax = float(g.lmax_bound())
+    coeffs = rng.randn(eta, order + 1)
+    op = UnionFilterOperator(coeffs=coeffs, lmax=lmax,
+                             gram_coeffs=chebyshev.gram_coefficients(coeffs))
+    key = jax.random.PRNGKey(seed)
+    f = jax.random.normal(key, (n,))
+    a = jax.random.normal(jax.random.fold_in(key, 1), (eta, n))
+    lhs = float(jnp.vdot(op.apply_dense(lap, f), a))
+    rhs = float(jnp.vdot(f, op.adjoint_dense(lap, a)))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-9)
+
+
+@settings
+@hypothesis.given(
+    seed=st.integers(0, 2**30),
+    order=st.integers(2, 20),
+)
+def test_gram_equals_composition_random(seed, order):
+    rng = np.random.RandomState(seed)
+    n = 32
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(seed % 89), n=n,
+                                     sigma=0.35, kappa=0.4)
+    lap = g.laplacian()
+    lmax = float(g.lmax_bound())
+    coeffs = rng.randn(2, order + 1) * (0.8 ** np.arange(order + 1))
+    op = UnionFilterOperator(coeffs=coeffs, lmax=lmax,
+                             gram_coeffs=chebyshev.gram_coefficients(coeffs))
+    f = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    via_gram = np.asarray(op.gram_apply_dense(lap, f))
+    via_comp = np.asarray(
+        op.adjoint_dense(lap, op.apply_dense(lap, f)))
+    np.testing.assert_allclose(via_gram, via_comp, rtol=1e-7, atol=1e-7)
+
+
+@settings
+@hypothesis.given(p=st.integers(3, 48), order=st.integers(1, 40))
+def test_consensus_polynomial_invariants(p, order):
+    """p_M(0) = 1 and |p_M| <= 1/T_M(t0) on [lam1, lmax], for all rings."""
+    lam1, lmax = gossip.ring_spectrum_bounds(p)
+    c = gossip.consensus_coefficients(order, lam1, lmax)[0]
+    p0 = chebyshev.cheb_eval(c, np.array([0.0]), lmax)[0]
+    np.testing.assert_allclose(p0, 1.0, atol=1e-8)
+    xs = np.linspace(lam1, lmax, 513)
+    bound = gossip.consensus_contraction(order, lam1, lmax)
+    assert np.max(np.abs(chebyshev.cheb_eval(c, xs, lmax))) \
+        <= bound * 1.02 + 1e-8
+
+
+@settings
+@hypothesis.given(
+    seed=st.integers(0, 2**30),
+    m1=st.integers(1, 10),
+    m2=st.integers(1, 10),
+)
+def test_chebyshev_product_identity_random(seed, m1, m2):
+    rng = np.random.RandomState(seed)
+    a = rng.randn(m1 + 1)
+    b = rng.randn(m2 + 1)
+    d = chebyshev.product_coefficients(a, b)
+    x = np.linspace(0.0, 5.0, 101)
+    pa = chebyshev.cheb_eval(a, x, 5.0)
+    pb = chebyshev.cheb_eval(b, x, 5.0)
+    pd = chebyshev.cheb_eval(d, x, 5.0)
+    np.testing.assert_allclose(pd, pa * pb, rtol=1e-8, atol=1e-8)
+
+
+@settings
+@hypothesis.given(
+    n=st.integers(20, 80),
+    n_parts=st.sampled_from([2, 4, 8]),
+    seed=st.integers(0, 2**30),
+)
+def test_partition_plan_invariants(n, n_parts, seed):
+    """Any spatial partition reassembles L exactly and bounds halo words."""
+    from repro.core.distributed import build_partition_plan, plan_row_slabs
+    g = graph.connected_sensor_graph(
+        jax.random.PRNGKey(seed % 101), n=n,
+        sigma=float(3.0 / np.sqrt(n)), kappa=float(3.1 / np.sqrt(n)))
+    plan = build_partition_plan(g.adjacency, g.coords, n_parts)
+    assert sorted(plan.order.tolist()) == list(range(g.n_vertices))
+    slabs = np.asarray(plan_row_slabs(plan)).reshape(
+        plan.n_parts * plan.n_local, -1)
+    lap = np.asarray(g.laplacian())
+    expect = np.zeros_like(slabs)
+    expect[:n, :n] = lap[np.ix_(plan.order, plan.order)]
+    np.testing.assert_allclose(slabs, expect, atol=1e-5)
+    assert plan.halo_words <= 2 * g.n_edges

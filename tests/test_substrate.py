@@ -1,0 +1,158 @@
+"""Optimizer / data / checkpoint / fault-tolerance substrate tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.configs import registry
+from repro.data import SyntheticTokenPipeline
+from repro.models import lm
+from repro.models.config import ParallelConfig
+from repro.optim import AdamWConfig, adamw_update, cosine_schedule, init_opt_state
+from repro.runtime import FailureInjector, WorkerFailure, run_with_restarts
+from repro.train import Trainer, make_train_step
+
+PAR = ParallelConfig(attn_impl="naive", remat="none")
+
+
+def test_cosine_schedule_shape():
+    c = AdamWConfig(peak_lr=1e-3, warmup_steps=10, total_steps=100)
+    assert float(cosine_schedule(c, 0)) == 0.0
+    assert float(cosine_schedule(c, 10)) == pytest.approx(1e-3)
+    assert float(cosine_schedule(c, 100)) == pytest.approx(0.0, abs=1e-9)
+    assert float(cosine_schedule(c, 55)) < 1e-3
+
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    optc = AdamWConfig(peak_lr=0.1, warmup_steps=0, total_steps=200,
+                       weight_decay=0.0)
+    state = init_opt_state(params, optc)
+    f = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(200):
+        g = jax.grad(f)(params)
+        params, state, _ = adamw_update(params, g, state, optc)
+    assert float(f(params)) < 1e-2
+
+
+def test_adamw_bf16_moments_close_to_fp32():
+    k = jax.random.PRNGKey(0)
+    params = {"w": jax.random.normal(k, (32,))}
+    g = {"w": jax.random.normal(jax.random.fold_in(k, 1), (32,))}
+    outs = {}
+    for dt in ("float32", "bfloat16"):
+        optc = AdamWConfig(peak_lr=1e-2, warmup_steps=0, moment_dtype=dt)
+        st = init_opt_state(params, optc)
+        p = params
+        for _ in range(5):
+            p, st, _ = adamw_update(p, g, st, optc)
+        outs[dt] = np.asarray(p["w"])
+    np.testing.assert_allclose(outs["float32"], outs["bfloat16"],
+                               rtol=0.05, atol=1e-3)
+
+
+def test_pipeline_deterministic():
+    pipe = SyntheticTokenPipeline(vocab_size=100, seq_len=16, global_batch=4)
+    b1, b2 = pipe.batch_at(7), pipe.batch_at(7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = pipe.batch_at(8)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": [jnp.ones((4,)), {"c": jnp.zeros((), jnp.int32)}]}
+    save(tmp_path, 3, tree)
+    assert latest_step(tmp_path) == 3
+    back = restore(tmp_path, 3, tree)
+    for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_checkpoint_manager_async_and_gc(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3):
+        mgr.save_async(s, {"x": jnp.full((4,), s)})
+    mgr.wait()
+    assert latest_step(tmp_path) == 3
+    steps = sorted(int(p.name.split("_")[1])
+                   for p in tmp_path.glob("step_*"))
+    assert steps == [2, 3]
+
+
+def _small_training_setup(tmp_path, fail_at=()):
+    cfg = registry.get_smoke("gemma2_2b")
+    optc = AdamWConfig(peak_lr=3e-3, warmup_steps=5, total_steps=40)
+    pipe = SyntheticTokenPipeline(cfg.vocab_size, seq_len=32, global_batch=4)
+    step_fn = jax.jit(make_train_step(cfg, PAR, optc))
+    mgr = CheckpointManager(tmp_path, keep=3)
+    # One injector shared across restarts: a lost node stays lost.
+    injector = FailureInjector(fail_at) if fail_at else None
+
+    def make_trainer(start_step):
+        params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+        opt = init_opt_state(params, optc)
+        if start_step > 0:
+            restored = restore(tmp_path, start_step,
+                               {"params": params, "opt": opt})
+            params, opt = restored["params"], restored["opt"]
+        return Trainer(
+            train_step=step_fn, pipeline=pipe, ckpt=mgr,
+            params=params, opt_state=opt, ckpt_every=5,
+            failure_injector=injector)
+
+    return make_trainer, mgr
+
+
+@pytest.mark.slow
+def test_training_loss_decreases(tmp_path):
+    make_trainer, _ = _small_training_setup(tmp_path)
+    result = make_trainer(0).run(30)
+    first = np.mean(result["losses"][:5])
+    last = np.mean(result["losses"][-5:])
+    assert last < first - 0.1, (first, last)
+
+
+@pytest.mark.slow
+def test_restart_from_checkpoint_after_failure(tmp_path):
+    # Fail at steps 12 and 23; supervisor restores from latest ckpt each
+    # time and the run still completes all 30 steps.
+    make_trainer, mgr = _small_training_setup(tmp_path, fail_at=(12, 23))
+    result = run_with_restarts(
+        make_trainer, 30, latest_step_fn=lambda: latest_step(tmp_path))
+    assert result["final_step"] == 30
+    assert result["restarts"] == 2
+    assert latest_step(tmp_path) == 30
+
+
+def test_failure_injector_raises_once():
+    inj = FailureInjector([3])
+    inj(2)
+    with pytest.raises(WorkerFailure):
+        inj(3)
+    inj(3)  # second pass does not raise
+
+
+@pytest.mark.slow
+def test_microbatched_grads_match_full_batch():
+    cfg = registry.get_smoke("llama3_405b")
+    optc = AdamWConfig(peak_lr=1e-3)
+    pipe = SyntheticTokenPipeline(cfg.vocab_size, seq_len=16, global_batch=8)
+    batch = pipe.batch_at(0)
+    params, _ = lm.init(jax.random.PRNGKey(1), cfg)
+    opt = init_opt_state(params, optc)
+    outs = {}
+    for n_micro in (1, 4):
+        par = ParallelConfig(attn_impl="naive", remat="none",
+                             microbatches=n_micro)
+        step = make_train_step(cfg, par, optc)
+        p2, _, m = step(params, opt, batch)
+        outs[n_micro] = (np.asarray(jax.tree.leaves(p2)[0]),
+                         float(m["loss"]))
+    np.testing.assert_allclose(outs[1][0], outs[4][0], rtol=2e-4, atol=2e-5)
+    assert outs[1][1] == pytest.approx(outs[4][1], rel=2e-4)

@@ -1,0 +1,70 @@
+"""Render EXPERIMENTS.md roofline tables from the dry-run JSON logs."""
+
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+
+def fmt_table(records, multi_pod: bool) -> str:
+    done = [r for r in records
+            if "bottleneck" in r and r.get("multi_pod") == multi_pod
+            and r.get("kind") != "gsp"]
+    skipped = [r for r in records
+               if "skipped" in r and r.get("multi_pod") == multi_pod]
+    lines = [
+        "| cell | fits? mem/dev | compute s | memory s | collective s | "
+        "bottleneck | useful FLOPs | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    for r in sorted(done, key=lambda r: (order[r["shape"]], r["arch"])):
+        gib = r["memory"]["total_per_device"] / 2**30
+        fits = "YES" if gib <= 16 else "no"
+        lines.append(
+            f"| {r['arch']}.{r['shape']} | {fits} {gib:.1f}GiB "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | {r['bottleneck']} "
+            f"| {r.get('useful_flop_ratio', 0):.3f} "
+            f"| {r.get('roofline_fraction', 0):.3f} |")
+    for r in sorted(skipped, key=lambda r: r["arch"]):
+        lines.append(
+            f"| {r['arch']}.{r['shape']} | — | — | — | — | "
+            f"SKIPPED: {r['skipped'][:40]} | — | — |")
+    return "\n".join(lines)
+
+
+def fmt_gsp(records) -> str:
+    gsp = [r for r in records if r.get("kind") == "gsp"]
+    lines = [
+        "| cell | backend | compute s | memory s | collective s | "
+        "bottleneck | coll bytes/dev |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for r in gsp:
+        pod = ".2pod" if r["multi_pod"] else ""
+        lines.append(
+            f"| sensor_gsp{pod} | {r['backend']} | {r['compute_s']:.6f} "
+            f"| {r['memory_s']:.6f} | {r['collective_s']:.6f} "
+            f"| {r['bottleneck']} "
+            f"| {r['collective_bytes_per_device']/1e6:.1f}MB |")
+    return "\n".join(lines)
+
+
+def main():
+    path = Path(sys.argv[1] if len(sys.argv) > 1
+                else "experiments/dryrun_baseline.json")
+    records = json.loads(path.read_text())
+    print("### Single-pod (16x16 = 256 chips)\n")
+    print(fmt_table(records, False))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(fmt_table(records, True))
+    print("\n### The paper's workload (sensor_gsp, 512x512 grid, F=128, "
+          "M=20)\n")
+    print(fmt_gsp(records))
+
+
+if __name__ == "__main__":
+    main()
