@@ -7,6 +7,8 @@ benchmarks. Prints ``name,us_per_call,derived`` CSV rows.
   tab_wavelet_ista     paper Sec.V-C — SGWT lasso denoising + comm costs
   tab_gossip           gossip consensus contraction + bytes vs all-reduce
   tab_kernel           Pallas fused step vs jnp reference (interpret mode)
+  tab_filter_backends  GraphFilter backend parity + fused union-combine
+                       kernel (pallas_call count, HBM T_k traffic, timing)
   tab_roofline         summary of the dry-run roofline table (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--full]
@@ -26,6 +28,7 @@ import numpy as np
 from repro.apps import denoise_tikhonov, wavelet_denoise_ista
 from repro.core import chebyshev, gossip, graph, multipliers, operators
 from repro.core.distributed import DistributedGraphContext, build_partition_plan
+from repro.filters import GraphFilter, get_backend
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -187,6 +190,74 @@ def tab_kernel(full: bool) -> None:
         f";nnz_blocks={bell.nnz_blocks};interpret_validated=1")
 
 
+# --------------------------------------------------- filter backends ---
+
+
+def tab_filter_backends(full: bool) -> None:
+    """Unified GraphFilter layer: per-backend parity vs the dense oracle,
+    and the fused union-combine kernel's structural claim — ONE pallas_call
+    per apply with zero per-order T_k HBM round-trips (the stepwise chain
+    issues M calls and materializes every T_k)."""
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(5), n=480,
+                                     sigma=0.075, kappa=0.076)
+    filt = GraphFilter.from_multipliers(
+        [multipliers.tikhonov(1.0, 1), multipliers.heat(0.5)],
+        order=20, graph=g)
+    f = jax.random.normal(jax.random.PRNGKey(6), (g.n_vertices, 8))
+    ref_out = filt.apply(f, backend="dense")
+
+    for be in ("bsr", "halo", "allgather"):
+        out = filt.apply(f, backend=be)  # warm: prepare + compile
+        us = _timeit(lambda be=be: filt.apply(f, backend=be))
+        err = float(jnp.max(jnp.abs(out - ref_out)))
+        row(f"tab_filter_backend_{be}", us, f"max_err_vs_dense={err:.1e}")
+
+    # grid backend on its native topology
+    gg = graph.grid_graph(32)
+    gf = GraphFilter.from_multipliers(
+        [multipliers.tikhonov(1.0, 1)], order=20, graph=gg, lmax=8.0)
+    xg = jax.random.normal(jax.random.PRNGKey(8), (gg.n_vertices, 8))
+    err = float(jnp.max(jnp.abs(
+        gf.apply(xg, backend="grid") - gf.apply(xg, backend="dense"))))
+    row("tab_filter_backend_grid", 0.0, f"max_err_vs_dense={err:.1e}")
+
+    # Structural comparison of the two Pallas paths on identical operands.
+    state = get_backend("bsr").prepare(filt)
+    bell = state.bell
+    fp = jnp.zeros((state.n_pad, 8), f.dtype).at[: state.n].set(f[state.perm])
+    coeffs = filt.coeffs
+    lmax = filt.lmax
+
+    def fused(blocks, cols, x):
+        return kops.cheb_apply_bsr_fused(
+            blocks, cols, x, coeffs, lmax, interpret=True)
+
+    def stepwise(blocks, cols, x):
+        return kops.cheb_apply_bsr(
+            blocks, cols, x, jnp.asarray(coeffs, x.dtype), lmax,
+            interpret=True)
+
+    step_out = stepwise(bell.blocks, bell.cols, fp)
+    n_calls = {}
+    for name, fn in (("fused", fused), ("stepwise", stepwise)):
+        jaxpr = jax.make_jaxpr(fn)(bell.blocks, bell.cols, fp)
+        n_calls[name] = str(jaxpr).count("pallas_call")
+        err = float(jnp.max(jnp.abs(
+            fn(bell.blocks, bell.cols, fp) - step_out)))
+        us = _timeit(lambda: fn(bell.blocks, bell.cols, fp))
+        row(f"tab_filter_union_{name}", us,
+            f"pallas_calls={n_calls[name]};order={filt.order}"
+            f";eta={filt.eta};max_err_vs_stepwise={err:.1e}")
+    # Fused: one pallas_call for the whole apply, T_k never leaves VMEM.
+    # Stepwise: the T_1 call plus the scan-body call executed M-1 times,
+    # each storing its (N, F) T_k to HBM — M materialized tensors/apply.
+    row("tab_filter_union_summary", 0.0,
+        f"fused_pallas_calls={n_calls['fused']}"
+        f";fused_tk_hbm_tensors=0"
+        f";stepwise_exec_pallas_calls={filt.order}"
+        f";stepwise_tk_hbm_tensors={filt.order}")
+
+
 # ----------------------------------------------------------- roofline --
 
 
@@ -208,7 +279,8 @@ def tab_roofline(full: bool) -> None:
 
 
 BENCHES = [fig4_cheb_approx, tab_denoising, tab_comm_scaling,
-           tab_wavelet_ista, tab_gossip, tab_kernel, tab_roofline]
+           tab_wavelet_ista, tab_gossip, tab_kernel, tab_filter_backends,
+           tab_roofline]
 
 
 def main() -> None:

@@ -1,13 +1,15 @@
-"""Distributed denoising on a multi-device mesh (paper Sec. IV + V-B).
+"""Distributed denoising on a multi-device mesh (paper Sec. IV + V-B),
+through the unified ``GraphFilter`` backend layer.
 
 Algorithm 1 executed across 8 devices: the 500-vertex sensor graph is
 spatially partitioned, each device owns a vertex slab, and every Chebyshev
-order exchanges only partition-boundary values (halo exchange via
-``all_to_all``). Verifies:
+order exchanges only partition-boundary values (``backend="halo"``; the
+``"allgather"`` backend is the naive baseline). Verifies:
 
   * distributed result == centralized result (both backends),
   * halo communication <= the paper's 2M|E| radio bound,
-  * denoising quality matches the paper (~0.013 MSE).
+  * denoising quality matches the paper (~0.013 MSE),
+  * distributed adjoint/gram identities hold on the mesh.
 
 This script forces 8 host platform devices, so it must run as its own
 process:  PYTHONPATH=src python examples/distributed_denoising.py
@@ -25,47 +27,34 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core import chebyshev, graph, multipliers  # noqa: E402
-from repro.core.distributed import (  # noqa: E402
-    DistributedGraphContext,
-    build_partition_plan,
-)
-from repro.core.operators import UnionFilterOperator  # noqa: E402
+from repro.core import graph, multipliers  # noqa: E402
+from repro.filters import GraphFilter  # noqa: E402
 
 
 def main() -> None:
     n_dev = len(jax.devices())
     assert n_dev == 8, f"expected 8 forced host devices, got {n_dev}"
-    mesh = jax.make_mesh((n_dev,), ("graph",))
 
     key = jax.random.PRNGKey(7)
     key, kg, kn = jax.random.split(key, 3)
     g = graph.connected_sensor_graph(kg, n=500)
     f0 = g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2 - 1.0
     y = f0 + 0.5 * jax.random.normal(kn, f0.shape)
-    lmax = float(g.lmax_bound())
     order = 20
 
-    plan = build_partition_plan(g.adjacency, g.coords, n_dev)
-    ctx = DistributedGraphContext(plan=plan, mesh=mesh, axis="graph")
-    op = UnionFilterOperator.from_multipliers(
-        [multipliers.tikhonov(1.0, 1)], order, lmax)
-
-    y_sharded = ctx.scatter_signal(y)
+    filt = GraphFilter.from_multipliers(
+        [multipliers.tikhonov(1.0, 1)], order, graph=g)
 
     results = {}
     for backend in ("halo", "allgather"):
-        out = ctx.cheb_apply(y_sharded, op.coeffs, lmax, backend=backend)
-        fhat = ctx.gather_signal(out)[0, :, 0]
+        fhat = np.asarray(filt.apply(y, backend=backend))[0]
         results[backend] = fhat
-        words = ctx.messages_per_apply(order, backend)
+        words = filt.messages_per_apply(backend=backend)
         print(f"[{backend:9s}] words/apply = {words:8d}   "
               f"MSE = {np.mean((fhat - np.asarray(f0)) ** 2):.4f}")
 
-    # Centralized reference.
-    lap = g.laplacian()
-    central = np.asarray(
-        op.apply_dense(lap, y))[0]
+    # Centralized reference through the same filter object.
+    central = np.asarray(filt.apply(y, backend="dense"))[0]
     for backend, fhat in results.items():
         err = np.max(np.abs(fhat - central))
         assert err < 1e-4, f"{backend} deviates from centralized: {err}"
@@ -73,8 +62,8 @@ def main() -> None:
 
     # Communication accounting vs the paper's radio model.
     paper_words = 2 * order * g.n_edges  # 2M|E| length-1 messages
-    halo_words = ctx.messages_per_apply(order, "halo")
-    ag_words = ctx.messages_per_apply(order, "allgather")
+    halo_words = filt.messages_per_apply(backend="halo")
+    ag_words = filt.messages_per_apply(backend="allgather")
     print(f"paper radio bound 2M|E|      = {paper_words}")
     print(f"halo exchange (mesh)         = {halo_words}  "
           f"({halo_words / paper_words:.2f}x of radio bound)")
@@ -89,18 +78,17 @@ def main() -> None:
 
     # Distributed adjoint + gram (paper Sec. IV-B/C): identities hold on
     # the mesh exactly as they do centralized.
-    from repro.core import multipliers as mult_mod
-    bank = mult_mod.sgwt_filter_bank(lmax, n_scales=3)
-    wop = UnionFilterOperator.from_multipliers(bank, order, lmax)
-    w_y = ctx.cheb_apply(y_sharded, wop.coeffs, lmax)  # (eta, N, 1)
-    a_back = ctx.cheb_adjoint(w_y, wop.coeffs, lmax)
-    gram = ctx.gram_apply(y_sharded, wop)
+    bank = multipliers.sgwt_filter_bank(filt.lmax, n_scales=3)
+    wop = GraphFilter.from_multipliers(bank, order, graph=g, lmax=filt.lmax)
+    w_y = wop.apply(y, backend="halo")  # (eta, N)
+    a_back = wop.adjoint(w_y, backend="halo")
+    gram = wop.gram(y, backend="halo")
     err = np.max(np.abs(np.asarray(a_back) - np.asarray(gram)))
     print(f"max |Phi*~(Phi~ y) - gram(y)| on mesh = {err:.2e}")
     assert err < 1e-3
     # adjoint inner-product identity distributed
     lhs = float(jnp.vdot(w_y, w_y))
-    rhs = float(jnp.vdot(y_sharded, a_back))
+    rhs = float(jnp.vdot(jnp.asarray(y), jnp.asarray(a_back)))
     assert abs(lhs - rhs) < 1e-2 * abs(lhs), (lhs, rhs)
     print("adjoint identity on mesh: "
           f"<Wy,Wy>={lhs:.4f} == <y,W*Wy>={rhs:.4f}")

@@ -21,7 +21,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.apps import wavelet_denoise_ista  # noqa: E402
-from repro.core import graph, multipliers  # noqa: E402
+from repro.core import compat, graph, multipliers  # noqa: E402
 from repro.core.distributed import (  # noqa: E402
     DistributedGraphContext, build_partition_plan)
 from repro.core.operators import UnionFilterOperator  # noqa: E402
@@ -30,8 +30,7 @@ from repro.core.operators import UnionFilterOperator  # noqa: E402
 def main() -> None:
     n_dev = len(jax.devices())
     assert n_dev == 8
-    mesh = jax.make_mesh((n_dev,), ("graph",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("graph",))
 
     key = jax.random.PRNGKey(21)
     kg, kn = jax.random.split(key)

@@ -23,14 +23,14 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 from jax.sharding import PartitionSpec as P  # noqa: E402
 
-from repro.core import gossip  # noqa: E402
+from repro.core import compat, gossip  # noqa: E402
+from repro.core.compat import shard_map  # noqa: E402
 
 
 def main() -> None:
     n_dev = len(jax.devices())
     assert n_dev == 8
-    mesh = jax.make_mesh((n_dev,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = compat.make_mesh((n_dev,), ("data",))
 
     key = jax.random.PRNGKey(0)
     # One fake gradient pytree per device (leading axis = device).
@@ -49,19 +49,20 @@ def main() -> None:
             return gossip.chebyshev_gossip_mean(
                 g, "data", n_dev, order=order)
 
-        out = jax.shard_map(
+        out = shard_map(
             sync, mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
         )(grads)
-        # Worst deviation of any device's view from the exact mean, relative
-        # to the initial disagreement magnitude.
-        err = max(
-            float(jnp.max(jnp.abs(out[k] - exact_mean[k][None])))
-            for k in grads
-        )
-        init = max(
-            float(jnp.max(jnp.abs(grads[k] - exact_mean[k][None])))
-            for k in grads
-        )
+        # Deviation from the exact mean relative to the initial
+        # disagreement, in the aggregate 2-norm — the norm the minimax
+        # contraction 1/T_M(t0) actually bounds (the polynomial filter
+        # shrinks every disagreement eigencomponent by at least that
+        # factor; per-entry max-norm ratios can exceed it).
+        err = float(jnp.sqrt(sum(
+            jnp.sum((out[k] - exact_mean[k][None]) ** 2) for k in grads
+        )))
+        init = float(jnp.sqrt(sum(
+            jnp.sum((grads[k] - exact_mean[k][None]) ** 2) for k in grads
+        )))
         bound = gossip.consensus_contraction(order, lam1, lmax)
         words = gossip.gossip_message_words(order, n_dev, n_params)
         print(f"{order:3d} {err / init:12.2e} {bound:12.2e} {words:12d}")

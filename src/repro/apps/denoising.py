@@ -1,24 +1,32 @@
 """Paper Sec. V applications: smoothing, Tikhonov denoising, SGWT-lasso
 denoising, and semi-supervised classification.
 
-Every routine takes an abstract Laplacian ``matvec`` so it runs unchanged on
-a dense Laplacian (centralized), the Pallas BSR kernel, or the
-``shard_map``-distributed halo matvec — the paper's point being that the
-*same* Chebyshev recurrence implements all deployment modes.
+Every routine is built on :class:`repro.filters.GraphFilter`, so it runs
+unchanged on any registered backend — dense, fused Pallas Block-ELL, or the
+``shard_map``-distributed meshes — the paper's point being that the *same*
+Chebyshev recurrence implements all deployment modes.
+
+Two calling conventions are accepted for backward compatibility:
+
+* a :class:`~repro.core.graph.SensorGraph` (preferred) — pass
+  ``backend="..."`` to choose the execution substrate;
+* a legacy ``matvec`` callable computing ``L @ v`` — routed through the
+  graph-free ``"matvec"`` backend exactly as before.
 """
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, Union
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import multipliers as mult
-from repro.core.operators import UnionFilterOperator
+from repro.core.graph import SensorGraph
+from repro.filters import GraphFilter
 
 Matvec = Callable[[jax.Array], jax.Array]
+GraphOrMatvec = Union[SensorGraph, Matvec]
 
 __all__ = [
     "smooth_heat",
@@ -28,45 +36,90 @@ __all__ = [
 ]
 
 
+def _as_filter(g: GraphOrMatvec, bank, order: int, lmax: float,
+               backend: str | None, opts: dict):
+    """Build a GraphFilter + resolved (backend, opts) from either calling
+    convention (SensorGraph, or a legacy matvec closure)."""
+    if isinstance(g, SensorGraph):
+        filt = GraphFilter.from_multipliers(bank, order, graph=g, lmax=lmax)
+        return filt, backend or "dense", opts
+    if backend not in (None, "matvec"):
+        raise ValueError(
+            f"backend={backend!r} needs a SensorGraph, got a matvec callable"
+        )
+    filt = GraphFilter.from_multipliers(bank, order, lmax=lmax)
+    return filt, "matvec", {**opts, "matvec": g}
+
+
 def smooth_heat(
-    matvec: Matvec, y: jax.Array, lmax: float, t: float = 1.0, order: int = 20
+    graph_or_matvec: GraphOrMatvec,
+    y: jax.Array,
+    lmax: float,
+    t: float = 1.0,
+    order: int = 20,
+    *,
+    backend: str | None = None,
+    **opts,
 ) -> jax.Array:
-    """Distributed smoothing (Sec. V-A): ``H~_t y`` with ``g = exp(-t x)``."""
-    op = UnionFilterOperator.from_multipliers([mult.heat(t)], order, lmax)
-    return op.apply(matvec, y)[0]
+    """Distributed smoothing (Sec. V-A): ``H~_t y`` with ``g = exp(-t x)``.
+
+    Parameters
+    ----------
+    graph_or_matvec : SensorGraph or callable
+        The graph (any backend), or a legacy ``L @ v`` closure.
+    y : jax.Array
+        (N,) or (N, F) signal to smooth.
+    lmax : float
+        Spectrum upper bound.
+    t, order : float, int
+        Heat-kernel time and Chebyshev order.
+    backend : str, optional
+        ``GraphFilter`` backend (default ``dense`` for graphs).
+    """
+    filt, be, opts = _as_filter(
+        graph_or_matvec, [mult.heat(t)], order, lmax, backend, opts)
+    return filt.apply(y, backend=be, **opts)[0]
 
 
 def denoise_tikhonov(
-    matvec: Matvec,
+    graph_or_matvec: GraphOrMatvec,
     y: jax.Array,
     lmax: float,
     tau: float = 1.0,
     r: int = 1,
     order: int = 20,
+    *,
+    backend: str | None = None,
+    **opts,
 ) -> jax.Array:
     """Distributed denoising (Sec. V-B, Prop. 1): ``R~ y`` with
     ``g(x) = tau / (tau + 2 x^r)`` — the closed-form minimizer of
     ``tau/2 ||f - y||^2 + f^T L^r f`` applied via Algorithm 1."""
-    op = UnionFilterOperator.from_multipliers([mult.tikhonov(tau, r)], order, lmax)
-    return op.apply(matvec, y)[0]
+    filt, be, opts = _as_filter(
+        graph_or_matvec, [mult.tikhonov(tau, r)], order, lmax, backend, opts)
+    return filt.apply(y, backend=be, **opts)[0]
 
 
 def ssl_classify(
-    matvec: Matvec,
+    graph_or_matvec: GraphOrMatvec,
     labels: jax.Array,
     lmax: float,
     tau: float = 1.0,
     r: int = 1,
     order: int = 20,
+    *,
+    backend: str | None = None,
+    **opts,
 ) -> jax.Array:
     """Distributed binary SSL (Sec. V-B end): labelled nodes carry +-1,
     unlabelled carry 0; every node outputs ``sign((R~ y)_n)``."""
-    scores = denoise_tikhonov(matvec, labels, lmax, tau, r, order)
+    scores = denoise_tikhonov(
+        graph_or_matvec, labels, lmax, tau, r, order, backend=backend, **opts)
     return jnp.where(scores >= 0.0, 1.0, -1.0)
 
 
 def wavelet_denoise_ista(
-    matvec: Matvec,
+    graph_or_matvec: GraphOrMatvec,
     y: jax.Array,
     lmax: float,
     *,
@@ -75,6 +128,8 @@ def wavelet_denoise_ista(
     mu: float | jax.Array = 1.0,
     n_iters: int = 50,
     step: float | None = None,
+    backend: str | None = None,
+    **opts,
 ) -> tuple[jax.Array, jax.Array]:
     """Distributed SGWT-lasso denoising (Sec. V-C).
 
@@ -90,21 +145,23 @@ def wavelet_denoise_ista(
     Returns (denoised_signal, wavelet_coefficients).
     """
     bank = mult.sgwt_filter_bank(lmax, n_scales=n_scales)
-    op = UnionFilterOperator.from_multipliers(bank, order, lmax)
+    filt, be, opts = _as_filter(graph_or_matvec, bank, order, lmax,
+                                backend, opts)
     if step is None:
         # ISTA converges for step < 2 / ||W||^2 (paper ref. [30]).
-        step = 1.0 / op.operator_norm_bound()
+        step = 1.0 / filt.operator_norm_bound()
     mu = jnp.asarray(mu, dtype=y.dtype)
     if mu.ndim == 0:
         # Scalar mu penalizes only the wavelet bands; the scaling (low-pass)
         # band carries the signal baseline and gets mu_i = 0 — the standard
         # weighted-lasso choice the paper's ||a||_{1,mu} notation allows.
         mu = jnp.concatenate([jnp.zeros((1,), y.dtype),
-                              jnp.full((op.eta - 1,), mu, y.dtype)])
-    mu = mu.reshape((op.eta,) + (1,) * y.ndim)
+                              jnp.full((filt.eta - 1,), mu, y.dtype)])
+    mu = mu.reshape((filt.eta,) + (1,) * y.ndim)
 
-    a0 = op.apply(matvec, y)  # warm start: a^(0) = W~ y (first iteration's
-    # forward transform; stored "for future iterations" per the paper)
+    # warm start: a^(0) = W~ y (first iteration's forward transform; stored
+    # "for future iterations" per the paper)
+    a0 = filt.apply(y, backend=be, **opts)
 
     thresh = mu * step
 
@@ -112,9 +169,17 @@ def wavelet_denoise_ista(
         return jnp.sign(z) * jnp.maximum(jnp.abs(z) - thresh, 0.0)
 
     def body(a, _):
-        resid = y - op.adjoint(matvec, a)
-        a = soft(a + step * op.apply(matvec, resid))
+        resid = y - filt.adjoint(a, backend=be, **opts)
+        a = soft(a + step * filt.apply(resid, backend=be, **opts))
         return a, None
 
-    a_star, _ = jax.lax.scan(body, a0, None, length=n_iters)
-    return op.adjoint(matvec, a_star), a_star
+    if be in ("matvec", "dense", "bsr"):
+        # Fully traceable backends: keep the ISTA loop on device via scan.
+        a_star, _ = jax.lax.scan(body, a0, None, length=n_iters)
+    else:
+        # Backends that stage host-side transfers (scatter/gather) cannot
+        # live inside scan; run the (short) loop on host.
+        a_star = a0
+        for _ in range(n_iters):
+            a_star, _ = body(a_star, None)
+    return filt.adjoint(a_star, backend=be, **opts), a_star

@@ -16,7 +16,7 @@ Two interchangeable matvec backends:
   (N words/device). This is the §Perf "before" configuration for the
   graph-signal mesh cell.
 
-Both run under ``jax.shard_map`` and compose with ``cheb_apply`` /
+Both run under ``shard_map`` and compose with ``cheb_apply`` /
 ``UnionFilterOperator`` unchanged, because those only see a matvec closure.
 
 The partition plan is built on host (static graph topology — the paper's
@@ -32,6 +32,8 @@ from typing import Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.compat import shard_map
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -190,6 +192,10 @@ class DistributedGraphContext:
     def cheb_apply(self, f_sharded, coeffs, lmax, backend: str = "halo"):
         """Distributed ``Phi~ f`` (Algorithm 1 on the mesh).
 
+        Prefer ``repro.filters.GraphFilter.apply(f, backend="halo")`` —
+        it builds the plan/mesh and handles scatter/gather; this method
+        is the underlying engine (and shim for pre-sharded callers).
+
         f_sharded: (P*n_local, F) sharded along ``axis``.
         Returns (eta, P*n_local, F) sharded along the vertex axis.
         """
@@ -206,7 +212,7 @@ class DistributedGraphContext:
                     v, l_own[0], l_halo[0], send_idx[0], axis)
                 return chebyshev.cheb_apply(mv, f_loc, coeffs, lmax)
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 local_fn,
                 mesh=self.mesh,
                 in_specs=(P(axis), P(axis), P(axis), P(axis)),
@@ -221,7 +227,7 @@ class DistributedGraphContext:
                 mv = lambda v: allgather_matvec(v, l_rows_loc[0], axis)
                 return chebyshev.cheb_apply(mv, f_loc, coeffs, lmax)
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 local_fn,
                 mesh=self.mesh,
                 in_specs=(P(axis), P(axis)),
@@ -246,7 +252,7 @@ class DistributedGraphContext:
                 v, l_own[0], l_halo[0], send_idx[0], axis)
             return chebyshev.cheb_adjoint_apply(mv, a_loc, coeffs, lmax)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             local_fn, mesh=self.mesh,
             in_specs=(P(None, self.axis), P(axis), P(axis), P(axis)),
             out_specs=P(axis))
@@ -261,10 +267,43 @@ class DistributedGraphContext:
         return out[0]
 
     def messages_per_apply(self, order: int, backend: str = "halo") -> int:
-        """Scalar words moved per ``Phi~ f`` (excl. padding), paper Sec. IV-A.
+        """Scalar words moved per ``Phi~ f`` (excluding padding slots).
 
-        The paper's radio count is 2M|E|; the mesh halo count is
-        M * halo_words with halo_words <= 2|E| (per-partition broadcast).
+        The paper's radio model (Sec. IV-A) bounds one apply of a union
+        filter by ``2 M |E|`` length-1 messages: each of the M recurrence
+        orders transmits every vertex value across every incident edge,
+        in both directions. On the device mesh the analogous counts are:
+
+        * ``halo`` — ``M * halo_words`` where ``halo_words`` sums, over
+          ordered partition pairs (p, q), the boundary vertices of q that
+          p's Laplacian rows touch. ``halo_words <= 2|E|`` always: a
+          boundary vertex is sent once per neighbouring *partition*
+          rather than once per edge (the mesh enjoys the same broadcast
+          saving the paper notes for radio nodes), so the halo backend
+          never exceeds the paper bound and typically lands far under it.
+        * ``allgather`` — ``M * n_local * P * (P - 1)``: every order,
+          every device ships its whole slab to all P-1 peers regardless
+          of the cut size. Independent of |E| — the baseline that makes
+          the halo saving measurable.
+
+        Single-device backends (dense, bsr) move no network words; the
+        grid backend's count is ``M * 2 * (P-1) * side`` (one boundary
+        row per direction per seam per order — see
+        ``repro.filters.GraphFilter.messages_per_apply``).
+
+        Parameters
+        ----------
+        order : int
+            Chebyshev truncation order M of the applied filter.
+        backend : {"halo", "allgather"}
+            Which distributed matvec's communication model to count.
+
+        Returns
+        -------
+        int
+            Scalar words exchanged across all devices for one apply of a
+            single (N,) signal; multiply by F for an (N, F) batch and by
+            ``eta`` for adjoint message *lengths* (Sec. IV-B).
         """
         if backend == "halo":
             return order * self.plan.halo_words

@@ -31,6 +31,12 @@ Matvec = Callable[[jax.Array], jax.Array]
 class UnionFilterOperator:
     """Chebyshev-approximated union of graph Fourier multipliers ``Phi~``.
 
+    .. deprecated::
+        Superseded by :class:`repro.filters.GraphFilter`, which adds
+        backend dispatch (dense / bsr / halo / allgather / grid) behind
+        the same spectral state. This class remains as a thin stable shim
+        for matvec-closure callers and existing tests.
+
     Attributes:
       coeffs: (eta, M+1) Chebyshev coefficients, paper eq. (8) convention.
       lmax: spectrum upper bound the polynomials were shifted to.

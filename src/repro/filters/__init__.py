@@ -1,0 +1,23 @@
+"""Unified graph-filter layer: one ``GraphFilter`` surface, many backends.
+
+Importing this package registers the shipped backends (``dense``, ``bsr``,
+``halo``, ``allgather``, ``grid``, ``matvec``); see DESIGN.md Sec. 6 for the
+architecture and README.md for the support matrix.
+"""
+
+from repro.filters.api import GraphFilter
+from repro.filters.registry import (
+    FilterBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.filters import backends as _backends  # noqa: F401  (registers)
+
+__all__ = [
+    "FilterBackend",
+    "GraphFilter",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+]

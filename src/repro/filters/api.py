@@ -1,0 +1,283 @@
+"""``GraphFilter`` — the one entry point for Chebyshev-approximated unions
+of graph Fourier multipliers (paper eqs. 8-11), backend-dispatched.
+
+The paper's central object is a *union* of multipliers applied through one
+shared Chebyshev recurrence. This module gives that object a single
+surface::
+
+    filt = GraphFilter.from_multipliers(bank, order=20, graph=g)
+    out  = filt.apply(f, backend="bsr")      # (eta,) + f.shape
+    back = filt.adjoint(out)                 # f.shape
+    gram = filt.gram(f)                      # Phi~* Phi~ f, one 2M filter
+
+replacing the three divergent entry points it consolidates
+(``core.chebyshev.cheb_apply``, ``kernels.ops.cheb_apply_bsr``,
+``core.distributed.DistributedGraphContext.cheb_apply`` — all still work,
+as thin shims over the same machinery). Backends are looked up in
+``repro.filters.registry``; see DESIGN.md Sec. 6 for the dispatch design
+and the backend support matrix in README.md.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import chebyshev
+from repro.core.graph import SensorGraph
+from repro.filters import registry
+
+__all__ = ["GraphFilter"]
+
+Multiplier = Callable[[np.ndarray], np.ndarray]
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class GraphFilter:
+    """A Chebyshev-approximated union of graph Fourier multipliers.
+
+    Identity semantics (``eq=False``): filters compare and hash by object
+    identity — array-valued fields make structural equality ill-defined,
+    and identity hashing lets a filter serve as a dict key or jit static
+    argument.
+
+    Carries the *spectral* description only — the multiplier bank, the
+    truncation order, the spectrum bound, and the precomputed coefficient
+    matrices. Graph-operator operands (dense Laplacian, Block-ELL tiles,
+    partition plans) are built lazily per backend and cached.
+
+    Parameters
+    ----------
+    coeffs : numpy.ndarray
+        (eta, M+1) Chebyshev coefficients — paper eq. (8) convention (the
+        k = 0 term enters with a 1/2 factor at evaluation time).
+    lmax : float
+        Upper bound on the Laplacian spectrum the polynomials were shifted
+        to (paper Sec. IV-A: need not be tight).
+    gram_coeffs : numpy.ndarray
+        (2M+1,) coefficients of ``Phi~* Phi~`` as a single filter
+        (paper Sec. IV-C product identity).
+    graph : SensorGraph, optional
+        The graph this filter is bound to. Required by every backend except
+        ``"matvec"``; bind one with :meth:`bind`.
+    multipliers : tuple of callables, optional
+        The original multiplier bank ``g_j: [0, lmax] -> R`` (kept for
+        re-expansion and diagnostics).
+
+    Examples
+    --------
+    >>> g = graph.connected_sensor_graph(jax.random.PRNGKey(0), n=500)
+    >>> filt = GraphFilter.from_multipliers(
+    ...     [multipliers.tikhonov(1.0, 1)], order=20, graph=g)
+    >>> denoised = filt.apply(y, backend="dense")[0]
+    """
+
+    coeffs: np.ndarray
+    lmax: float
+    gram_coeffs: np.ndarray
+    graph: SensorGraph | None = None
+    multipliers: tuple[Multiplier, ...] | None = None
+    _states: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False
+    )
+
+    # -- constructors ----------------------------------------------------
+
+    @classmethod
+    def from_multipliers(
+        cls,
+        multipliers: Sequence[Multiplier],
+        order: int,
+        *,
+        graph: SensorGraph | None = None,
+        lmax: float | None = None,
+        quad_points: int | None = None,
+    ) -> "GraphFilter":
+        """Expand a multiplier bank to Chebyshev coefficients (eq. 8).
+
+        Parameters
+        ----------
+        multipliers : sequence of callables
+            ``eta`` numpy-vectorized kernels ``g_j: [0, lmax] -> R``.
+        order : int
+            Truncation order M (paper: M ~ 20 suffices in practice).
+        graph : SensorGraph, optional
+            Graph to bind; when given and ``lmax`` is None, the
+            Anderson--Morley bound ``graph.lmax_bound()`` is used.
+        lmax : float, optional
+            Explicit spectrum bound (required if ``graph`` is None).
+        quad_points : int, optional
+            Chebyshev--Gauss quadrature nodes for eq. (8).
+
+        Returns
+        -------
+        GraphFilter
+        """
+        if lmax is None:
+            if graph is None:
+                raise ValueError("need either graph= or lmax=")
+            lmax = float(graph.lmax_bound())
+        c = chebyshev.cheb_coefficients(multipliers, order, lmax, quad_points)
+        return cls(
+            coeffs=c,
+            lmax=float(lmax),
+            gram_coeffs=chebyshev.gram_coefficients(c),
+            graph=graph,
+            multipliers=tuple(multipliers),
+        )
+
+    @classmethod
+    def from_coefficients(
+        cls,
+        coeffs: np.ndarray,
+        lmax: float,
+        *,
+        graph: SensorGraph | None = None,
+    ) -> "GraphFilter":
+        """Wrap precomputed (eta, M+1) coefficients in a filter."""
+        c = np.atleast_2d(np.asarray(coeffs, dtype=np.float64))
+        return cls(
+            coeffs=c,
+            lmax=float(lmax),
+            gram_coeffs=chebyshev.gram_coefficients(c),
+            graph=graph,
+        )
+
+    def bind(self, graph: SensorGraph) -> "GraphFilter":
+        """Return a copy bound to ``graph`` (backend states reset)."""
+        return dataclasses.replace(self, graph=graph, _states={})
+
+    # -- introspection ---------------------------------------------------
+
+    @property
+    def eta(self) -> int:
+        """Number of multipliers in the union."""
+        return self.coeffs.shape[0]
+
+    @property
+    def order(self) -> int:
+        """Chebyshev truncation order M."""
+        return self.coeffs.shape[1] - 1
+
+    def operator_norm_bound(self) -> float:
+        """Upper bound on ``||Phi~||^2 = max_x sum_j p_j(x)^2`` over the
+        shifted domain — e.g. to pick the ISTA step ``tau < 2/||W~||^2``."""
+        x = np.linspace(0.0, self.lmax, 8192)
+        vals = chebyshev.cheb_eval(self.coeffs, x, self.lmax)
+        return float(np.max(np.sum(np.atleast_2d(vals) ** 2, axis=0)))
+
+    # -- backend dispatch ------------------------------------------------
+
+    def _backend_state(self, be: registry.FilterBackend, opts: dict) -> Any:
+        # Backends that share prepared operands (halo/allgather both use
+        # the same partition plan) declare a common ``state_key``.
+        key = (getattr(be, "state_key", be.name),) + tuple(
+            sorted((k, v) for k, v in opts.items() if k in be.prepare_opts)
+        )
+        if key not in self._states:
+            self._states[key] = be.prepare(self, **opts)
+        return self._states[key]
+
+    def apply(
+        self, f: jax.Array, *, backend: str = "dense", **opts
+    ) -> jax.Array:
+        """Apply the union ``Phi~ f`` through one shared recurrence.
+
+        Parameters
+        ----------
+        f : jax.Array
+            Input signal, shape (N,) or (N, F) for a batch of F signals.
+        backend : str
+            Registered backend name — one of
+            ``repro.filters.available_backends()``; shipping backends are
+            ``dense``, ``bsr``, ``halo``, ``allgather``, ``grid`` and the
+            graph-free ``matvec``.
+        **opts
+            Backend options (e.g. ``block_size=`` for ``bsr``, ``mesh=`` /
+            ``axis=`` for distributed backends, ``matvec=`` for
+            ``matvec``).
+
+        Returns
+        -------
+        jax.Array
+            (eta,) + f.shape stacked outputs ``[Psi~_1 f, ..., Psi~_eta f]``.
+        """
+        be = registry.get_backend(backend)
+        return be.apply(self, self._backend_state(be, opts), f, **opts)
+
+    def adjoint(
+        self, a: jax.Array, *, backend: str = "dense", **opts
+    ) -> jax.Array:
+        """Apply the adjoint ``Phi~* a`` (paper eq. 13 / Sec. IV-B).
+
+        Parameters
+        ----------
+        a : jax.Array
+            (eta,) + signal.shape stacked coefficient signals.
+
+        Returns
+        -------
+        jax.Array
+            signal.shape adjoint output.
+        """
+        be = registry.get_backend(backend)
+        return be.adjoint(self, self._backend_state(be, opts), a, **opts)
+
+    def gram(
+        self, f: jax.Array, *, backend: str = "dense", **opts
+    ) -> jax.Array:
+        """``Phi~* Phi~ f`` as a *single* degree-2M filter (Sec. IV-C).
+
+        Costs 2M matvecs — half of composing ``adjoint(apply(f))``.
+        """
+        be = registry.get_backend(backend)
+        state = self._backend_state(be, opts)
+        out = be.apply(
+            self, state, f, coeffs=np.atleast_2d(self.gram_coeffs), **opts
+        )
+        return out[0]
+
+    def messages_per_apply(
+        self,
+        order: int | None = None,
+        *,
+        backend: str = "halo",
+        **opts,
+    ) -> int:
+        """Scalar words exchanged between workers per ``Phi~ f``.
+
+        The paper's radio model bounds one apply by ``2 M |E|`` length-1
+        messages (each of the M recurrence steps sends every vertex value
+        across every edge, both directions). Per backend:
+
+        * ``dense`` / ``bsr`` / ``matvec`` — 0: single-device, the
+          "communication" is HBM traffic, not network words.
+        * ``halo`` — ``M * halo_words`` with ``halo_words <= 2|E|``: a
+          boundary vertex is sent once per neighbouring *partition*, not
+          once per edge, so the mesh does no worse than the radio bound.
+        * ``allgather`` — ``M * n_local * P * (P - 1)``: every device ships
+          its whole slab to everyone each order (the §Perf "before").
+        * ``grid`` — ``M * 2 * (P - 1) * side``: one boundary row up and
+          down per order; the communication-avoiding schedule (depth d)
+          moves the same words in M/d rounds.
+
+        Parameters
+        ----------
+        order : int, optional
+            Recurrence order M; defaults to this filter's order.
+        backend : str
+            Backend whose communication model to evaluate.
+
+        Returns
+        -------
+        int
+            Scalar words per apply of one (N,) signal.
+        """
+        be = registry.get_backend(backend)
+        state = self._backend_state(be, opts)
+        return be.messages_per_apply(
+            self, state, self.order if order is None else order
+        )

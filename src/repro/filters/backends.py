@@ -1,0 +1,476 @@
+"""The shipped ``GraphFilter`` backends (DESIGN.md Sec. 6.2).
+
+Five graph-bound substrates plus one graph-free escape hatch:
+
+* ``dense``      — jnp reference: dense Laplacian matvec, ``lax.scan``
+                   recurrence. The parity oracle for everything else.
+* ``bsr``        — Pallas Block-ELL: the fused union-combine kernel when
+                   the VMEM budget allows (one ``pallas_call`` per apply),
+                   the stepwise per-order chain otherwise.
+* ``halo``       — ``shard_map`` vertex partition, per-order boundary
+                   (halo) exchange via ``all_to_all`` — Algorithm 1 on the
+                   device mesh.
+* ``allgather``  — naive distributed baseline: full-signal all-gather per
+                   order (the §Perf "before" configuration).
+* ``grid``       — matrix-free stencil Laplacian on row slabs with the
+                   communication-avoiding depth-d schedule (square grid
+                   graphs only).
+* ``matvec``     — no graph: the caller supplies ``matvec=`` computing
+                   ``L @ v`` (legacy entry point; keeps ``apps/`` shims and
+                   exotic operators working).
+
+All backends share the same numerics: the eq. 9 recurrence in f32 with the
+eq. 11 coefficient combine, so outputs agree to float tolerance (enforced
+by ``tests/test_filters.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import compat
+from repro.core.compat import shard_map
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import chebyshev
+from repro.core import graph as graph_lib
+from repro.core.distributed import (
+    DistributedGraphContext,
+    build_partition_plan,
+    grid_cheb_apply_ca,
+    grid_slab_matvec,
+)
+from repro.filters.registry import register_backend
+from repro.kernels import autotune, ops as kops, ref as kref
+
+__all__ = [
+    "DenseBackend",
+    "BsrBackend",
+    "HaloBackend",
+    "AllgatherBackend",
+    "GridBackend",
+    "MatvecBackend",
+]
+
+
+def _require_graph(filt, name: str):
+    if filt.graph is None:
+        raise ValueError(
+            f"backend {name!r} needs a bound graph; build the filter with "
+            "graph=... or call filt.bind(graph)"
+        )
+    return filt.graph
+
+
+def _coeffs_or(filt, coeffs) -> np.ndarray:
+    return np.atleast_2d(
+        np.asarray(filt.coeffs if coeffs is None else coeffs)
+    )
+
+
+def _default_mesh(axis: str, n_parts: int | None) -> Mesh:
+    n = n_parts or len(jax.devices())
+    return compat.make_mesh((n,), (axis,))
+
+
+@register_backend
+class MatvecBackend:
+    """Graph-free backend: the caller supplies the Laplacian action.
+
+    ``filt.apply(f, backend="matvec", matvec=fn)`` runs the recurrence with
+    ``fn(v) = L @ v`` — any linear map with the Laplacian's symmetry. This
+    is the abstraction the rest of the repo was originally written against
+    and remains the escape hatch for operators no packaged backend covers.
+    """
+
+    name = "matvec"
+    prepare_opts: frozenset[str] = frozenset()
+
+    def prepare(self, filt, **_):
+        return None
+
+    def apply(self, filt, state, f, *, coeffs=None, matvec=None, **_):
+        if matvec is None:
+            raise ValueError("backend 'matvec' requires matvec=")
+        c = _coeffs_or(filt, coeffs)
+        return chebyshev.cheb_apply(matvec, f, c, filt.lmax)
+
+    def adjoint(self, filt, state, a, *, matvec=None, **_):
+        if matvec is None:
+            raise ValueError("backend 'matvec' requires matvec=")
+        return chebyshev.cheb_adjoint_apply(matvec, a, filt.coeffs, filt.lmax)
+
+    def messages_per_apply(self, filt, state, order: int) -> int:
+        return 0
+
+
+@register_backend
+class DenseBackend:
+    """jnp reference backend: dense Laplacian, ``lax.scan`` recurrence."""
+
+    name = "dense"
+    prepare_opts: frozenset[str] = frozenset()
+
+    def prepare(self, filt, **_):
+        g = _require_graph(filt, self.name)
+        return g.laplacian()
+
+    def apply(self, filt, lap, f, *, coeffs=None, **_):
+        c = _coeffs_or(filt, coeffs)
+        return chebyshev.cheb_apply(lambda v: lap @ v, f, c, filt.lmax)
+
+    def adjoint(self, filt, lap, a, **_):
+        # tensordot (not @): the adjoint recurrence carries the eta blocks
+        # in trailing dims, so contract the vertex axis explicitly.
+        return chebyshev.cheb_adjoint_apply(
+            lambda v: jnp.tensordot(lap, v, axes=1), a, filt.coeffs,
+            filt.lmax,
+        )
+
+    def messages_per_apply(self, filt, state, order: int) -> int:
+        return 0
+
+
+@dataclasses.dataclass(frozen=True)
+class _BsrState:
+    bell: kref.BlockEll
+    perm: np.ndarray  # vertex permutation applied before tiling
+    inv: np.ndarray  # positions of the true vertices in permuted order
+    n: int  # true vertex count
+    n_pad: int
+
+
+@register_backend
+class BsrBackend:
+    """Pallas Block-ELL backend (DESIGN.md Sec. 3 + 6.3).
+
+    ``prepare`` spatially reorders the vertices (recursive coordinate
+    bisection) so nonzeros cluster into dense MXU tiles, then converts the
+    Laplacian to Block-ELL. ``apply`` picks the fused union-combine kernel
+    when the autotune table says the VMEM working set fits, else chains the
+    stepwise kernel.
+
+    Options: ``block_size`` (prepare; default 8), ``interpret`` (default:
+    auto — True off-TPU), ``f_tile`` / ``fuse`` overrides.
+    """
+
+    name = "bsr"
+    prepare_opts: frozenset[str] = frozenset({"block_size"})
+
+    def prepare(self, filt, *, block_size: int = 8, **_):
+        g = _require_graph(filt, self.name)
+        lap = np.asarray(g.laplacian(), np.float64)
+        n = lap.shape[0]
+        if g.coords is not None:
+            perm = graph_lib.spatial_partition_order(
+                np.asarray(g.coords), max(n // block_size, 1)
+            )
+        else:
+            perm = np.arange(n)
+        bell = kref.bsr_from_dense(lap[np.ix_(perm, perm)], block_size)
+        inv = np.empty(n, dtype=np.int64)
+        inv[perm] = np.arange(n)
+        return _BsrState(bell=bell, perm=perm, inv=inv, n=n, n_pad=bell.n)
+
+    def _forward(self, state: _BsrState, f):
+        """Permute + pad an (N, ...) signal into kernel layout."""
+        f = jnp.asarray(f)
+        squeeze = f.ndim == 1
+        f2 = f[:, None] if squeeze else f
+        fp = jnp.zeros((state.n_pad,) + f2.shape[1:], f2.dtype)
+        fp = fp.at[: state.n].set(f2[state.perm])
+        return fp, squeeze
+
+    def apply(
+        self,
+        filt,
+        state: _BsrState,
+        f,
+        *,
+        coeffs=None,
+        interpret: bool | None = None,
+        f_tile: int | None = None,
+        fuse: bool | None = None,
+        **_,
+    ):
+        c = _coeffs_or(filt, coeffs)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        fp, squeeze = self._forward(state, f)
+        bell = state.bell
+        tiling = autotune.select_tiling(
+            state.n_pad, fp.shape[1], c.shape[0],
+            bell.n_block_rows, bell.k_max, bell.block_size, fp.dtype,
+        )
+        if fuse is None:
+            fuse = tiling.fuse
+        ft = f_tile or tiling.f_tile
+        if fuse:
+            out = kops.cheb_apply_bsr_fused(
+                bell.blocks, bell.cols, fp, c, filt.lmax,
+                interpret=interpret, f_tile=ft,
+            )
+        else:
+            out = kops.cheb_apply_bsr(
+                bell.blocks, bell.cols, fp, jnp.asarray(c, fp.dtype),
+                filt.lmax, interpret=interpret, f_tile=ft,
+            )
+        out = out[:, state.inv]
+        return out[:, :, 0] if squeeze else out
+
+    def adjoint(self, filt, state: _BsrState, a, **_):
+        # Adjoint = same recurrence on eta-stacked blocks (Sec. IV-B); the
+        # matvec is the jnp Block-ELL oracle — adjoint traffic is a small
+        # fraction of forward traffic, so it does not warrant a kernel.
+        a = jnp.asarray(a)
+        squeeze = a.ndim == 2  # (eta, N) -> signals are 1-D
+        a3 = a[:, :, None] if squeeze else a
+        ap = jnp.zeros((a3.shape[0], state.n_pad) + a3.shape[2:], a3.dtype)
+        ap = ap.at[:, : state.n].set(a3[:, state.perm])
+        bell = state.bell
+
+        def mv(v):  # v: (n_pad, [F,] eta) — flatten trailing for the oracle
+            flat = v.reshape(state.n_pad, -1)
+            return kref.bsr_matvec_ref(bell, flat).reshape(v.shape)
+
+        out = chebyshev.cheb_adjoint_apply(mv, ap, filt.coeffs, filt.lmax)
+        out = out[state.inv]
+        return out[:, 0] if squeeze else out
+
+    def messages_per_apply(self, filt, state, order: int) -> int:
+        return 0  # single-chip: HBM traffic, not network words
+
+
+class _ShardedBackendBase:
+    """Shared machinery for the partition-plan distributed backends.
+
+    ``state_key`` is shared so halo and allgather reuse one prepared
+    ``DistributedGraphContext`` (the plan depends only on graph + mesh +
+    axis, not on which matvec consumes it).
+    """
+
+    name = "halo"
+    state_key = "partition_plan"
+    prepare_opts: frozenset[str] = frozenset({"mesh", "axis", "n_parts"})
+
+    def prepare(
+        self,
+        filt,
+        *,
+        mesh: Mesh | None = None,
+        axis: str = "graph",
+        n_parts: int | None = None,
+        **_,
+    ):
+        g = _require_graph(filt, self.name)
+        if mesh is None:
+            mesh = _default_mesh(axis, n_parts)
+        plan = build_partition_plan(
+            g.adjacency, g.coords, mesh.shape[axis]
+        )
+        return DistributedGraphContext(plan=plan, mesh=mesh, axis=axis)
+
+    def apply(self, filt, ctx: DistributedGraphContext, f, *, coeffs=None, **_):
+        c = _coeffs_or(filt, coeffs)
+        f = jnp.asarray(f)
+        squeeze = f.ndim == 1
+        sharded = ctx.scatter_signal(f)
+        out = ctx.cheb_apply(sharded, c, filt.lmax, backend=self.name)
+        out = jnp.asarray(ctx.gather_signal(np.asarray(out)))
+        return out[:, :, 0] if squeeze else out
+
+    def adjoint(self, filt, ctx: DistributedGraphContext, a, **_):
+        a = jnp.asarray(a)
+        squeeze = a.ndim == 2
+        a3 = a[:, :, None] if squeeze else a
+        plan = ctx.plan
+        pad = plan.n_local * plan.n_parts - plan.n
+        ap = jnp.concatenate(
+            [
+                a3[:, plan.order],
+                jnp.zeros((a3.shape[0], pad) + a3.shape[2:], a3.dtype),
+            ],
+            axis=1,
+        )
+        ap = jax.device_put(ap, NamedSharding(ctx.mesh, P(None, ctx.axis)))
+        out = ctx.cheb_adjoint(ap, filt.coeffs, filt.lmax)
+        out = jnp.asarray(ctx.gather_signal(np.asarray(out)))
+        return out[:, 0] if squeeze else out
+
+    def messages_per_apply(self, filt, ctx, order: int) -> int:
+        return ctx.messages_per_apply(order, backend=self.name)
+
+
+@register_backend
+class HaloBackend(_ShardedBackendBase):
+    """Vertex-partitioned distributed backend, halo exchange per order.
+
+    Algorithm 1 on the device mesh: device p sends device q exactly the
+    boundary values q's Laplacian rows touch, via one ``all_to_all`` per
+    recurrence order. Words per apply = ``M * halo_words <= 2 M |E|`` —
+    never worse than the paper's radio bound (a boundary vertex is sent
+    once per neighbouring partition, not once per edge).
+    """
+
+    name = "halo"
+
+
+@register_backend
+class AllgatherBackend(_ShardedBackendBase):
+    """Naive distributed baseline: all-gather the full signal per order.
+
+    Words per apply = ``M * n_local * P * (P-1)`` — the §Perf "before"
+    configuration that the halo backend's partition-boundary exchange
+    replaces.
+    """
+
+    name = "allgather"
+
+
+@dataclasses.dataclass(frozen=True)
+class _GridState:
+    side: int
+    mesh: Mesh
+    axis: str
+    n_parts: int
+    depth: int
+    apply_fn: object  # jitted shard_map (f2, coeffs) -> (eta, N, F)
+    adjoint_fn: object  # jitted shard_map (a3, coeffs) -> (N, F)
+
+
+@register_backend
+class GridBackend:
+    """Matrix-free stencil backend for square 4-neighbour grid graphs.
+
+    Row slabs over one mesh axis; each recurrence block exchanges a
+    depth-d ghost-row halo once and runs d local steps — the
+    communication-avoiding schedule (same words as per-order exchange, 1/d
+    the neighbour rounds). The Laplacian is never materialized: at 10^5+
+    vertices this is the production configuration (DESIGN.md Sec. 6.2).
+
+    Options: ``mesh`` / ``axis`` / ``n_parts`` (prepare), ``depth``
+    (prepare; ghost depth d, default 2 capped to rows-per-slab).
+    """
+
+    name = "grid"
+    prepare_opts: frozenset[str] = frozenset(
+        {"mesh", "axis", "n_parts", "depth"}
+    )
+
+    def prepare(
+        self,
+        filt,
+        *,
+        mesh: Mesh | None = None,
+        axis: str = "grid",
+        n_parts: int | None = None,
+        depth: int = 2,
+        **_,
+    ):
+        g = _require_graph(filt, self.name)
+        n = g.n_vertices
+        side = int(round(math.sqrt(n)))
+        if side * side != n:
+            raise ValueError(
+                f"grid backend needs a square grid graph, got N={n}"
+            )
+        # Structural validation at every scale: unit weights, the stencil
+        # degree field, and the exact edge count together pin down the
+        # 4-neighbour grid without building a reference adjacency.
+        a = np.asarray(g.adjacency)
+        vals = np.unique(a)
+        deg = a.sum(axis=1).reshape(side, side)
+        want_deg = np.full((side, side), 4.0)
+        want_deg[0, :] -= 1.0
+        want_deg[-1, :] -= 1.0
+        want_deg[:, 0] -= 1.0
+        want_deg[:, -1] -= 1.0
+        n_edges_want = 2 * side * (side - 1)
+        if (not np.all(np.isin(vals, (0.0, 1.0)))
+                or not np.array_equal(deg, want_deg)
+                or int(np.count_nonzero(a)) != 2 * n_edges_want):
+            raise ValueError(
+                "grid backend: adjacency is not the unit-weight "
+                f"4-neighbour {side}x{side} grid"
+            )
+        if n <= 4096:  # exact check is cheap at test scales
+            want = np.asarray(graph_lib.grid_graph(side).adjacency)
+            if not np.array_equal(a, want):
+                raise ValueError(
+                    "grid backend: adjacency is not the unit-weight "
+                    f"4-neighbour {side}x{side} grid"
+                )
+        if mesh is None:
+            mesh = _default_mesh(axis, n_parts)
+        p = mesh.shape[axis]
+        if side % p != 0:
+            raise ValueError(f"side={side} not divisible by n_parts={p}")
+        depth = max(1, min(depth, side // p))
+        lmax = filt.lmax
+
+        # Build the jitted shard_map programs once per prepared state —
+        # coefficients enter as a (replicated) argument so the same
+        # compiled program serves apply() and gram().
+        def local_apply(f_loc, c):
+            return grid_cheb_apply_ca(
+                f_loc, jnp.asarray(c, f_loc.dtype), lmax,
+                side=side, axis_names=(axis,), n_parts=p, depth=depth,
+            )
+
+        apply_fn = jax.jit(shard_map(
+            local_apply, mesh=mesh,
+            in_specs=(P(axis), P(None, None)),
+            out_specs=P(None, axis),
+        ))
+
+        def local_adjoint(a_loc, c):
+            def mv(v):  # (n_local, [F,] eta) — flatten for the stencil
+                flat = v.reshape(v.shape[0], -1)
+                out = grid_slab_matvec(
+                    flat, side=side, axis_names=(axis,), n_parts=p,
+                )
+                return out.reshape(v.shape)
+
+            return chebyshev.cheb_adjoint_apply(
+                mv, a_loc, jnp.asarray(c, a_loc.dtype), lmax)
+
+        adjoint_fn = jax.jit(shard_map(
+            local_adjoint, mesh=mesh,
+            in_specs=(P(None, axis), P(None, None)),
+            out_specs=P(axis),
+        ))
+
+        return _GridState(side=side, mesh=mesh, axis=axis, n_parts=p,
+                          depth=depth, apply_fn=apply_fn,
+                          adjoint_fn=adjoint_fn)
+
+    def apply(self, filt, state: _GridState, f, *, coeffs=None, **_):
+        c = jnp.asarray(_coeffs_or(filt, coeffs), jnp.float32)
+        f = jnp.asarray(f)
+        squeeze = f.ndim == 1
+        f2 = f[:, None] if squeeze else f
+        f2 = jax.device_put(
+            f2, NamedSharding(state.mesh, P(state.axis))
+        )
+        out = state.apply_fn(f2, c)
+        return out[:, :, 0] if squeeze else out
+
+    def adjoint(self, filt, state: _GridState, a, **_):
+        a = jnp.asarray(a)
+        squeeze = a.ndim == 2
+        a3 = a[:, :, None] if squeeze else a
+        a3 = jax.device_put(
+            a3, NamedSharding(state.mesh, P(None, state.axis))
+        )
+        out = state.adjoint_fn(a3, jnp.asarray(filt.coeffs, jnp.float32))
+        return out[:, 0] if squeeze else out
+
+    def messages_per_apply(self, filt, state: _GridState, order: int) -> int:
+        # one (side,) boundary row up + down per order across P-1 seams;
+        # the CA schedule moves the same words in order/depth rounds.
+        return order * 2 * (state.n_parts - 1) * state.side

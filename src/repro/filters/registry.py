@@ -1,0 +1,102 @@
+"""Backend registry for :class:`repro.filters.GraphFilter`.
+
+One filtering primitive, many execution substrates (DESIGN.md Sec. 6): a
+backend packages how ``Phi~ f`` / ``Phi~* a`` are evaluated — dense matmul,
+fused Pallas Block-ELL kernel, or a ``shard_map``-distributed matvec — behind
+a small protocol, so new substrates (GPU sparse, multi-host) drop in by
+registering one class and never touch callers.
+
+The protocol mirrors the paper's separation of concerns: the *spectral* data
+(coefficients, lmax) lives on the filter; the *graph-operator* data (dense
+Laplacian, Block-ELL tiles, partition plans) is backend state built once by
+``prepare`` and cached on the filter per backend.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Protocol, runtime_checkable
+
+import jax
+
+__all__ = [
+    "FilterBackend",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+]
+
+
+@runtime_checkable
+class FilterBackend(Protocol):
+    """Protocol every ``GraphFilter`` backend implements.
+
+    Attributes
+    ----------
+    name : str
+        Registry key, e.g. ``"dense"`` or ``"halo"``.
+    prepare_opts : frozenset of str
+        Names of keyword options that select *which* prepared state is used
+        (they become part of the filter's state-cache key and must be
+        hashable). All other options only affect the individual call.
+    state_key : str, optional
+        Cache key for prepared state; defaults to ``name``. Backends whose
+        ``prepare`` builds identical operands (halo/allgather share one
+        partition plan) declare a common value to share the state.
+    """
+
+    name: str
+    prepare_opts: frozenset[str]
+
+    def prepare(self, filt, **opts) -> Any:
+        """Build backend state (operands, plans) for ``filt``; called once
+        per (filter, prepare-opts) pair and cached."""
+        ...
+
+    def apply(self, filt, state, f, *, coeffs=None, **opts) -> jax.Array:
+        """``Phi~ f`` -> (eta,) + f.shape (``coeffs`` overrides the
+        filter's, used by ``gram``)."""
+        ...
+
+    def adjoint(self, filt, state, a, **opts) -> jax.Array:
+        """``Phi~* a`` for ``a`` shaped (eta,) + signal.shape."""
+        ...
+
+    def messages_per_apply(self, filt, state, order: int) -> int:
+        """Scalar words exchanged between workers per apply (0 when the
+        backend is single-device); see DESIGN.md Sec. 6.2."""
+        ...
+
+
+_REGISTRY: dict[str, FilterBackend] = {}
+
+
+def register_backend(cls):
+    """Class decorator: instantiate and register a backend under its
+    ``name``. Re-registering a name overwrites (supports reloads)."""
+    backend = cls()
+    if not isinstance(backend, FilterBackend):
+        raise TypeError(f"{cls!r} does not implement FilterBackend")
+    _REGISTRY[backend.name] = backend
+    return cls
+
+
+def get_backend(name: str) -> FilterBackend:
+    """Look up a registered backend by name.
+
+    Raises
+    ------
+    KeyError
+        With the list of available backends, if ``name`` is unknown.
+    """
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown filter backend {name!r}; "
+            f"available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def available_backends() -> tuple[str, ...]:
+    """Names of all registered backends, sorted."""
+    return tuple(sorted(_REGISTRY))

@@ -1,7 +1,22 @@
 """Pallas TPU kernels for the method's compute hot-spot (fused Block-ELL
 Laplacian matvec + Chebyshev recurrence), with jnp oracles in ref.py."""
 
-from repro.kernels.cheb_bsr import cheb_step_pallas
-from repro.kernels.ops import BlockEll, bsr_from_dense, cheb_apply_bsr
+from repro.kernels.autotune import Tiling, select_tiling
+from repro.kernels.cheb_bsr import cheb_step_pallas, cheb_union_pallas
+from repro.kernels.ops import (
+    BlockEll,
+    bsr_from_dense,
+    cheb_apply_bsr,
+    cheb_apply_bsr_fused,
+)
 
-__all__ = ["BlockEll", "bsr_from_dense", "cheb_apply_bsr", "cheb_step_pallas"]
+__all__ = [
+    "BlockEll",
+    "Tiling",
+    "bsr_from_dense",
+    "cheb_apply_bsr",
+    "cheb_apply_bsr_fused",
+    "cheb_step_pallas",
+    "cheb_union_pallas",
+    "select_tiling",
+]

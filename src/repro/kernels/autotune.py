@@ -1,0 +1,145 @@
+"""Tiling selection for the Chebyshev kernels: autotune-by-table.
+
+Real autotuning (sweep + timing) is wasteful for a filter that is built
+once and applied millions of times with a handful of distinct shapes.
+Instead we keep a small table of measured-good configurations keyed by
+coarse shape buckets, and fall back to a deterministic VMEM-budget model
+for shapes the table does not cover (DESIGN.md Sec. 6.3).
+
+The decision this module makes:
+
+* ``f_tile``  — the F-dimension tile both kernels pipeline over,
+* ``fuse``    — whether the fused union-combine kernel
+  (:func:`repro.kernels.cheb_bsr.cheb_union_pallas`) fits: it keeps the
+  whole (N, f_tile) Krylov state plus the (eta, N, f_tile) accumulators in
+  VMEM, which is only legal while the working set stays under the budget.
+  When it does not fit, callers chain the stepwise kernel instead.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["Tiling", "select_tiling", "union_vmem_bytes"]
+
+# ~16 MB/core on current TPUs; leave headroom for pipelining buffers and
+# the compiler's own scratch. Interpret mode has no real budget but we keep
+# the same decisions so CPU tests exercise the TPU code paths.
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024
+
+# Measured-good f_tile per (block_size bucket, dtype bucket). The table is
+# deliberately tiny: MXU-aligned 128 everywhere F allows it, smaller lanes
+# only for small-F workloads. Extend with measured entries as new shapes
+# ship; unknown keys fall through to the formula below.
+_F_TILE_TABLE: dict[tuple[int, str], tuple[int, ...]] = {
+    (8, "float32"): (128, 64, 32, 16, 8),
+    (8, "bfloat16"): (128, 64, 32, 16),
+    (16, "float32"): (128, 64, 32, 16),
+    (16, "bfloat16"): (128, 64, 32, 16),
+    (128, "float32"): (256, 128),
+    (128, "bfloat16"): (256, 128),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Tiling:
+    """Resolved kernel launch configuration.
+
+    Attributes:
+      f_tile: F-dimension tile size (divides F).
+      fuse: True when the fused union-combine kernel fits in VMEM.
+      vmem_bytes: working-set estimate of the fused kernel at this tiling.
+    """
+
+    f_tile: int
+    fuse: bool
+    vmem_bytes: int
+
+
+def union_vmem_bytes(
+    n: int,
+    f_tile: int,
+    eta: int,
+    n_rows: int,
+    k_max: int,
+    block: int,
+    dtype=jnp.float32,
+) -> int:
+    """VMEM working set of the fused union kernel (bytes).
+
+    Counts the resident Laplacian tiles, the input tile, two f32 Krylov
+    buffers, the (eta, N, f_tile) f32 accumulators, and the output tile.
+    """
+    itemsize = jnp.dtype(dtype).itemsize
+    blocks_b = n_rows * k_max * block * block * itemsize
+    sig_b = n * f_tile * itemsize  # input tile
+    krylov_b = 2 * n * f_tile * 4  # f32 ping/pong
+    acc_b = eta * n * f_tile * 4  # f32 accumulators
+    out_b = eta * n * f_tile * itemsize
+    return blocks_b + sig_b + krylov_b + acc_b + out_b
+
+
+def select_tiling(
+    n: int,
+    f: int,
+    eta: int,
+    n_rows: int,
+    k_max: int,
+    block: int,
+    dtype=jnp.float32,
+    vmem_budget: int = VMEM_BUDGET_BYTES,
+) -> Tiling:
+    """Pick ``(f_tile, fuse)`` for a Chebyshev union apply.
+
+    Parameters
+    ----------
+    n, f : int
+        Padded signal shape (N, F).
+    eta : int
+        Number of multipliers in the union.
+    n_rows, k_max, block : int
+        Block-ELL operand shape.
+    dtype : jnp dtype
+        Signal/Laplacian dtype.
+    vmem_budget : int
+        Bytes the fused working set may occupy.
+
+    Returns
+    -------
+    Tiling
+        Largest table-listed ``f_tile`` dividing F (falling back to the
+        largest power-of-two divisor of F up to 128), with ``fuse`` set
+        when the fused working set fits the budget.
+    """
+    dt_name = jnp.dtype(dtype).name
+    candidates = _F_TILE_TABLE.get(
+        (block, dt_name), (256, 128, 64, 32, 16, 8)
+    )
+    f_tile = next((c for c in candidates if f % c == 0), None)
+    if f_tile is None:
+        f_tile = 1
+        c = 1
+        while c <= min(f, 128):
+            if f % c == 0:
+                f_tile = c
+            c *= 2
+
+    # Shrink the tile further if that is what it takes to fuse.
+    best = None
+    for cand in sorted({c for c in (f_tile, *candidates) if f % c == 0},
+                       reverse=True):
+        bytes_ = union_vmem_bytes(n, cand, eta, n_rows, k_max, block, dtype)
+        if bytes_ <= vmem_budget:
+            best = Tiling(f_tile=cand, fuse=True, vmem_bytes=bytes_)
+            break
+    if best is None:
+        best = Tiling(
+            f_tile=f_tile,
+            fuse=False,
+            vmem_bytes=union_vmem_bytes(
+                n, f_tile, eta, n_rows, k_max, block, dtype
+            ),
+        )
+    return best

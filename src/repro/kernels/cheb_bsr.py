@@ -29,7 +29,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["cheb_step_pallas"]
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x.
+_CompilerParams = getattr(
+    pltpu, "CompilerParams", getattr(pltpu, "TPUCompilerParams", None)
+)
+
+__all__ = ["cheb_step_pallas", "cheb_union_pallas"]
 
 
 def _cheb_step_kernel(
@@ -137,8 +142,195 @@ def cheb_step_pallas(
             scratch_shapes=[pltpu.VMEM((b, ft), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((n, f), t1.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(cols, blocks, t1, t1, t2)
+
+
+# ---------------------------------------------------------------------------
+# Fused union-combine kernel: the whole Chebyshev apply in ONE pallas_call.
+# ---------------------------------------------------------------------------
+
+
+def _cheb_union_kernel(
+    # scalar-prefetch operand
+    cols_ref,  # (n_rows, k_max) int32, SMEM
+    # tensor operands
+    blocks_ref,  # (n_rows, k_max, B, B) — the whole Block-ELL Laplacian
+    f_ref,  # (N, FT)                     input signal tile (= T_0)
+    out_ref,  # (eta, N, FT)              combined outputs, one per multiplier
+    ta_ref,  # (N, FT) f32 VMEM scratch — T_k ping buffer
+    tb_ref,  # (N, FT) f32 VMEM scratch — T_k pong buffer
+    acc_ref,  # (eta, N, FT) f32 VMEM scratch — eq. 11 accumulators
+    *,
+    coeffs: tuple[tuple[float, ...], ...],
+    alpha: float,
+    n_rows: int,
+    k_max: int,
+    block: int,
+    ft: int,
+):
+    """Run eq. 9 + eq. 11 entirely in VMEM.
+
+    The recurrence alternates between two (N, FT) scratch buffers; the j-th
+    accumulator picks up ``c_{j,k} * T_k`` inside the same row loop that
+    produces ``T_k``, so no order's ``T_k`` is ever stored to HBM. The
+    in-place pong write is safe: row ``i`` of ``T_{k-2}`` is consumed
+    (aligned read) in the same loop iteration that overwrites it, and the
+    gathered operand is always the *other* buffer (``T_{k-1}``).
+    """
+    eta = len(coeffs)
+    order = len(coeffs[0]) - 1
+    f32 = jnp.float32
+
+    def spmv_row(src_ref, i):
+        """(L @ src)[i-th block row] via scalar-prefetched tile gather."""
+        acc = jnp.zeros((block, ft), f32)
+        for j in range(k_max):
+            c = cols_ref[i, j]
+            seg = src_ref[pl.ds(c * block, block), :]
+            acc += jnp.dot(
+                blocks_ref[i, j].astype(f32), seg.astype(f32),
+                preferred_element_type=f32,
+            )
+        return acc
+
+    # ---- k = 0, 1:  T_1 = (L - aI) f / a, accumulators initialised -------
+    def init_row(i, _):
+        sl = pl.ds(i * block, block)
+        t0 = f_ref[sl, :].astype(f32)
+        t1 = spmv_row(f_ref, i) / alpha - t0
+        ta_ref[sl, :] = t1
+        for j in range(eta):
+            acc_ref[j, sl, :] = coeffs[j][0] * 0.5 * t0 + coeffs[j][1] * t1
+        return 0
+
+    jax.lax.fori_loop(0, n_rows, init_row, 0, unroll=False)
+
+    # ---- k >= 2: ping-pong the recurrence, combine in the same pass ------
+    def make_step(k, src1_ref, src0_ref, dst_ref):
+        # src0 may alias dst: T_k overwrites T_{k-2} row by row (see above).
+        def step_row(i, _):
+            sl = pl.ds(i * block, block)
+            lx = spmv_row(src1_ref, i)
+            t_new = (
+                (2.0 / alpha) * lx
+                - 2.0 * src1_ref[sl, :]
+                - src0_ref[sl, :]
+            )
+            dst_ref[sl, :] = t_new
+            for j in range(eta):
+                acc_ref[j, sl, :] += coeffs[j][k] * t_new
+            return 0
+
+        jax.lax.fori_loop(0, n_rows, step_row, 0, unroll=False)
+
+    for k in range(2, order + 1):
+        if k == 2:
+            # T_0 still lives in the (read-only) input tile.
+            make_step(k, ta_ref, f_ref, tb_ref)
+        elif k % 2 == 1:
+            make_step(k, tb_ref, ta_ref, ta_ref)
+        else:
+            make_step(k, ta_ref, tb_ref, tb_ref)
+
+    out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("coeffs", "lmax", "f_tile", "interpret"),
+)
+def cheb_union_pallas(
+    blocks: jax.Array,
+    cols: jax.Array,
+    f: jax.Array,
+    *,
+    coeffs: tuple[tuple[float, ...], ...],
+    lmax: float,
+    f_tile: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Full union apply ``Phi~ f`` in a single fused ``pallas_call``.
+
+    Fuses the recurrence (eq. 9) *and* the union combine (eq. 11): the
+    per-signal-tile state — two Krylov buffers plus the ``eta``
+    accumulators — lives in VMEM for the whole apply, so intermediate
+    ``T_k`` tensors are never materialized to HBM (the stepwise
+    ``cheb_apply_bsr`` chain stores each ``T_k`` once per order).
+
+    Requires the working set to fit in VMEM; use
+    :func:`repro.kernels.autotune.select_tiling` to decide between this
+    kernel and the stepwise fallback, and to pick ``f_tile``.
+
+    Parameters
+    ----------
+    blocks : jax.Array
+        (n_rows, k_max, B, B) Block-ELL Laplacian tiles.
+    cols : jax.Array
+        (n_rows, k_max) int32 block-column ids (padding: col 0 + zero tile).
+    f : jax.Array
+        (N, F) signal batch, ``N = n_rows * B``.
+    coeffs : tuple of tuples
+        Static (eta, M+1) Chebyshev coefficients (hashable: one compile per
+        filter, matching the build-once / apply-many filter lifecycle).
+    lmax : float
+        Static spectrum upper bound.
+    f_tile : int, optional
+        F-dimension tile; defaults to ``min(F, 128)``.
+    interpret : bool
+        Run in Pallas interpret mode (CPU validation path).
+
+    Returns
+    -------
+    jax.Array
+        (eta, N, F) stacked filter outputs.
+    """
+    n_rows, k_max, b, b2 = blocks.shape
+    assert b == b2, blocks.shape
+    n, fdim = f.shape
+    assert n == n_rows * b, (f.shape, blocks.shape)
+    eta = len(coeffs)
+    order = len(coeffs[0]) - 1
+    assert order >= 1, "need at least order 1 (two coefficients)"
+    ft = f_tile or min(fdim, 128)
+    assert fdim % ft == 0, (fdim, ft)
+    alpha = lmax / 2.0
+
+    kernel = functools.partial(
+        _cheb_union_kernel,
+        coeffs=coeffs,
+        alpha=alpha,
+        n_rows=n_rows,
+        k_max=k_max,
+        block=b,
+        ft=ft,
+    )
+
+    grid = (fdim // ft,)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (n_rows, k_max, b, b), lambda fi, cols: (0, 0, 0, 0)
+                ),
+                pl.BlockSpec((n, ft), lambda fi, cols: (0, fi)),
+            ],
+            out_specs=pl.BlockSpec((eta, n, ft), lambda fi, cols: (0, 0, fi)),
+            scratch_shapes=[
+                pltpu.VMEM((n, ft), jnp.float32),
+                pltpu.VMEM((n, ft), jnp.float32),
+                pltpu.VMEM((eta, n, ft), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((eta, n, fdim), f.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(cols, blocks, f)

@@ -1,9 +1,14 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-``cheb_apply_bsr`` runs the full union-of-multipliers application (paper
-Alg. 1 compute) with the fused Pallas step as the matvec engine; the
-coefficient combine (eq. 11) stays in jnp — it is O(eta N F) AXPYs which XLA
-fuses into the recurrence's consumers.
+``cheb_apply_bsr_fused`` is the preferred path: one fused ``pallas_call``
+runs the recurrence (eq. 9) *and* the union combine (eq. 11) with all
+intermediate ``T_k`` state in VMEM. ``cheb_apply_bsr`` is the stepwise
+chain — one ``pallas_call`` per order with the combine left to XLA — kept
+as the fallback for working sets that exceed VMEM (see
+``repro.kernels.autotune``) and as the fused kernel's parity oracle.
+
+Callers should normally go through ``repro.filters.GraphFilter`` with
+``backend="bsr"`` rather than these wrappers.
 """
 
 from __future__ import annotations
@@ -12,11 +17,66 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.kernels.cheb_bsr import cheb_step_pallas
+from repro.kernels.autotune import select_tiling
+from repro.kernels.cheb_bsr import cheb_step_pallas, cheb_union_pallas
 from repro.kernels.ref import BlockEll, bsr_from_dense
 
-__all__ = ["BlockEll", "bsr_from_dense", "cheb_apply_bsr"]
+__all__ = [
+    "BlockEll",
+    "bsr_from_dense",
+    "cheb_apply_bsr",
+    "cheb_apply_bsr_fused",
+]
+
+
+def cheb_apply_bsr_fused(
+    blocks: jax.Array,
+    cols: jax.Array,
+    f: jax.Array,
+    coeffs,
+    lmax: float,
+    *,
+    interpret: bool = False,
+    f_tile: int | None = None,
+) -> jax.Array:
+    """``Phi~ f`` via the fused union-combine kernel (one ``pallas_call``).
+
+    Parameters
+    ----------
+    blocks, cols : jax.Array
+        Block-ELL Laplacian (see ``kernels/ref.py``).
+    f : jax.Array
+        (N, F) signal batch.
+    coeffs : array-like
+        (eta, M+1) Chebyshev coefficients. Converted to static host
+        constants — filters are built once, so this costs one compile per
+        filter, and lets the kernel bake the eq. 11 combine weights in.
+    lmax : float
+        Spectrum bound (static).
+    interpret : bool
+        Pallas interpret mode (CPU validation path).
+    f_tile : int, optional
+        F tile override; defaults to the autotune table's choice.
+
+    Returns
+    -------
+    jax.Array
+        (eta, N, F).
+    """
+    ctup = tuple(
+        tuple(float(x) for x in row) for row in np.atleast_2d(np.asarray(coeffs))
+    )
+    if f_tile is None:
+        n_rows, k_max, b, _ = blocks.shape
+        f_tile = select_tiling(
+            f.shape[0], f.shape[1], len(ctup), n_rows, k_max, b, f.dtype
+        ).f_tile
+    return cheb_union_pallas(
+        blocks, cols, f,
+        coeffs=ctup, lmax=float(lmax), f_tile=f_tile, interpret=interpret,
+    )
 
 
 @functools.partial(
@@ -32,7 +92,11 @@ def cheb_apply_bsr(
     interpret: bool = False,
     f_tile: int | None = None,
 ) -> jax.Array:
-    """``Phi~ f`` with the fused Pallas Chebyshev engine.
+    """``Phi~ f`` with the stepwise Pallas chain (one call per order).
+
+    Prefer ``cheb_apply_bsr_fused`` (or ``GraphFilter`` with
+    ``backend="bsr"``) — it avoids materializing each ``T_k`` to HBM. This
+    chain remains the large-N fallback and the fused kernel's oracle.
 
     Args:
       blocks/cols: Block-ELL Laplacian (see kernels/ref.py).

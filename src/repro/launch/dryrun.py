@@ -25,6 +25,8 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.compat import shard_map
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -223,6 +225,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         t_compile = time.monotonic() - t0 - t_lower
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+            cost = cost[0] if cost else {}
         mem = compiled.memory_analysis()
         text = compiled.as_text()
 
@@ -312,13 +316,15 @@ def run_gsp_cell(*, multi_pod: bool = False, backend: str = "halo",
                                  n_parts=n_chips)
             return chebyshev.cheb_apply(mv, f_loc, cj, lmax)
 
-    fn = jax.shard_map(local_fn, mesh=mesh, in_specs=(P(axes),),
-                       out_specs=P(None, axes))
+    fn = shard_map(local_fn, mesh=mesh, in_specs=(P(axes),),
+                   out_specs=P(None, axes))
     t0 = time.monotonic()
     with mesh:
         lowered = jax.jit(fn).lower(f_spec)
         compiled = lowered.compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # jax 0.4.x returns [dict]
+            cost = cost[0] if cost else {}
         mem = compiled.memory_analysis()
         text = compiled.as_text()
     w = analyze_hlo(text, activation_width=4)  # GSP runs f32

@@ -8,6 +8,7 @@ before first jax init; tests and benches keep their single device.
 from __future__ import annotations
 
 import jax
+from repro.core import compat
 
 __all__ = ["make_production_mesh", "axis_sizes"]
 
@@ -21,9 +22,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes)
 
 
 def axis_sizes(mesh) -> dict[str, int]:

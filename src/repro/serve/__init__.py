@@ -1,3 +1,13 @@
-from repro.serve.engine import ServeEngine, make_decode_step, make_prefill
+from repro.serve.engine import (
+    GraphFilterEngine,
+    ServeEngine,
+    make_decode_step,
+    make_prefill,
+)
 
-__all__ = ["ServeEngine", "make_decode_step", "make_prefill"]
+__all__ = [
+    "GraphFilterEngine",
+    "ServeEngine",
+    "make_decode_step",
+    "make_prefill",
+]

@@ -1,9 +1,16 @@
-"""Batched serving engine: prefill + decode steps and a simple
-static-batching request loop with per-request stop handling.
+"""Batched serving engines.
 
-The jit'd steps are the same functions the dry-run lowers for the decode
-cells; the engine adds host-side request management (sampling, EOS, new
-request admission into freed slots — a minimal continuous-batching loop).
+Two workloads share the static-batching pattern:
+
+* ``ServeEngine`` — LM prefill/decode with per-request stop handling (the
+  jit'd steps are the same functions the dry-run lowers for the decode
+  cells).
+* ``GraphFilterEngine`` — graph-signal filtering as a service: incoming
+  (N,)-signal requests are packed into an (N, F) panel and answered by ONE
+  ``GraphFilter.apply`` — the union recurrence is F-blind, so batching
+  amortizes the whole Krylov sequence (and, on the ``bsr`` backend, feeds
+  the fused union-combine kernel MXU-shaped panels). This is the serving
+  face of the paper's "one recurrence, eta outputs" economics.
 """
 
 from __future__ import annotations
@@ -15,11 +22,17 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.filters import GraphFilter
 from repro.models import lm
 from repro.models.config import ModelConfig, ParallelConfig
 from repro.models.sharding import ShardingRules
 
-__all__ = ["make_decode_step", "make_prefill", "ServeEngine"]
+__all__ = [
+    "make_decode_step",
+    "make_prefill",
+    "ServeEngine",
+    "GraphFilterEngine",
+]
 
 
 def make_decode_step(cfg: ModelConfig, par: ParallelConfig,
@@ -80,3 +93,63 @@ class ServeEngine:
         return jax.random.categorical(
             key, logits / self.temperature, axis=-1
         ).astype(jnp.int32)[:, None]
+
+
+@dataclasses.dataclass
+class GraphFilterEngine:
+    """Micro-batching front end for a :class:`GraphFilter`.
+
+    Requests (one (N,) signal each) accumulate until ``panel_width`` are
+    pending, then one backend apply answers the whole panel. A fixed panel
+    width keeps the jit cache at a single entry (the partial last panel is
+    zero-padded), which is also what the fused Pallas kernel wants: a
+    stable MXU-aligned F dimension.
+
+    Parameters
+    ----------
+    filt : GraphFilter
+        The filter to serve (graph already bound for graph-bound backends).
+    backend : str
+        ``GraphFilter`` backend to answer panels with.
+    panel_width : int
+        F dimension of the served panel; requests per apply.
+    opts : dict
+        Extra backend options forwarded to every apply.
+    """
+
+    filt: GraphFilter
+    backend: str = "bsr"
+    panel_width: int = 8
+    opts: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        self._pending: list[np.ndarray] = []
+        self.served = 0
+        self.applies = 0
+
+    def submit(self, signal) -> list[np.ndarray] | None:
+        """Queue one (N,) signal; returns the panel's (eta, N) results —
+        one array per queued request, submission order — when it fills."""
+        self._pending.append(np.asarray(signal))
+        if len(self._pending) >= self.panel_width:
+            return self.flush()
+        return None
+
+    def flush(self) -> list[np.ndarray] | None:
+        """Answer all pending requests now (pads a partial panel)."""
+        if not self._pending:
+            return None
+        k = len(self._pending)
+        panel = np.stack(self._pending, axis=1)  # (N, k)
+        if panel.dtype == np.float64:  # host inputs default to f64
+            panel = panel.astype(np.float32)
+        if k < self.panel_width:
+            panel = np.pad(panel, ((0, 0), (0, self.panel_width - k)))
+        out = self.filt.apply(
+            jnp.asarray(panel), backend=self.backend, **self.opts
+        )
+        out = np.asarray(out)  # (eta, N, panel_width)
+        self._pending.clear()
+        self.served += k
+        self.applies += 1
+        return [out[:, :, i] for i in range(k)]

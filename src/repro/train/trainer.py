@@ -23,6 +23,8 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.compat import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core import gossip
@@ -120,7 +122,7 @@ def make_gossip_train_step(
         loss = jax.lax.pmean(loss, data_axis)
         return params, opt_state, {"loss": loss, **om}
 
-    return jax.shard_map(
+    return shard_map(
         local_step,
         mesh=mesh,
         in_specs=(P(), P(), P(data_axis)),
@@ -164,11 +166,11 @@ def make_local_sgd_train_step(
         return jax.tree_util.tree_map(
             lambda v: jax.lax.pmean(v, data_axis), params)
 
-    step = jax.shard_map(
+    step = shard_map(
         local_step, mesh=mesh,
         in_specs=(P(), P(), P(data_axis)), out_specs=(P(), P(), P()),
         axis_names={data_axis}, check_vma=False)
-    sync = jax.shard_map(
+    sync = shard_map(
         resync, mesh=mesh, in_specs=(P(),), out_specs=P(),
         axis_names={data_axis}, check_vma=False)
     return step, sync

@@ -13,11 +13,13 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+from repro.core import compat
+from repro.core.compat import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.core import chebyshev, graph, multipliers
 from repro.core.distributed import grid_cheb_apply_ca, grid_slab_matvec
 
-mesh = jax.make_mesh((8,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("x",))
 side, F = 32, 4
 g = graph.grid_graph(side)
 lap = np.asarray(g.laplacian())
@@ -32,7 +34,7 @@ for order in (3, 11, 20):
             return grid_cheb_apply_ca(
                 f_loc, jnp.asarray(coeffs, jnp.float32), 8.0, side=side,
                 axis_names=("x",), n_parts=8, depth=depth)
-        out = jax.jit(jax.shard_map(
+        out = jax.jit(shard_map(
             ca, mesh=mesh, in_specs=(P("x"),), out_specs=P(None, "x")))(f)
         err = float(np.max(np.abs(np.asarray(out) - np.asarray(ref))))
         assert err < 5e-6, (order, depth, err)
@@ -43,7 +45,7 @@ def base(f_loc):
                                     n_parts=8)
     return chebyshev.cheb_apply(mv, f_loc, jnp.asarray(coeffs, jnp.float32),
                                 8.0)
-out = jax.jit(jax.shard_map(
+out = jax.jit(shard_map(
     base, mesh=mesh, in_specs=(P("x"),), out_specs=P(None, "x")))(f)
 assert float(np.max(np.abs(np.asarray(out) - np.asarray(ref)))) < 5e-6
 print("OK")

@@ -13,12 +13,12 @@ RESHARD_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np, tempfile
+from repro.core import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.checkpoint import restore_resharded, save
 
 # Train-like pytree saved under mesh A (8 = 4 data x 2 model) ...
-mesh_a = jax.make_mesh((4, 2), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_a = compat.make_mesh((4, 2), ("data", "model"))
 tree = {
     "w": jnp.arange(64 * 32, dtype=jnp.bfloat16).reshape(64, 32),
     "m": jnp.ones((64, 32), jnp.float32),
@@ -30,8 +30,7 @@ ckpt = tempfile.mkdtemp()
 save(ckpt, 7, tree)
 
 # ... restored onto mesh B (2 x 4) — the elastic-restart path.
-mesh_b = jax.make_mesh((2, 4), ("data", "model"),
-                       axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh_b = compat.make_mesh((2, 4), ("data", "model"))
 shardings = {
     "w": NamedSharding(mesh_b, P("data", "model")),
     "m": NamedSharding(mesh_b, P(None, "model")),
@@ -50,6 +49,7 @@ GOSSIP_TRAIN_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+from repro.core import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import registry
 from repro.data import SyntheticTokenPipeline
@@ -58,7 +58,7 @@ from repro.models.config import ParallelConfig
 from repro.optim import AdamWConfig, init_opt_state
 from repro.train import make_gossip_train_step, make_train_step
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 cfg = registry.get_smoke("codeqwen15_7b")
 optc = AdamWConfig(peak_lr=4e-3, warmup_steps=2, total_steps=40)
 pipe = SyntheticTokenPipeline(cfg.vocab_size, seq_len=32, global_batch=8)
@@ -117,6 +117,7 @@ LOCAL_SGD_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
+from repro.core import compat
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import registry
 from repro.data import SyntheticTokenPipeline
@@ -125,7 +126,7 @@ from repro.models.config import ParallelConfig
 from repro.optim import AdamWConfig, init_opt_state
 from repro.train import make_local_sgd_train_step
 
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 cfg = registry.get_smoke("codeqwen15_7b")
 optc = AdamWConfig(peak_lr=4e-3, warmup_steps=2, total_steps=40)
 pipe = SyntheticTokenPipeline(cfg.vocab_size, seq_len=32, global_batch=8)

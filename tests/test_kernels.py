@@ -1,8 +1,11 @@
 """Pallas kernel validation: interpret-mode vs pure-jnp oracle across
-shape/dtype sweeps + hypothesis property tests."""
+shape/dtype sweeps.
 
-import hypothesis
-import hypothesis.strategies as st
+The hypothesis property-based cases live in ``test_kernel_properties.py``
+(own module so this one collects even without the optional ``hypothesis``
+dev dependency — see requirements-dev.txt).
+"""
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -86,29 +89,6 @@ def test_full_apply_agrees_with_core_dense_path():
     dense = chebyshev.cheb_apply_dense(jnp.asarray(lap), f[:n], coeffs, lmax)
     np.testing.assert_allclose(np.asarray(got)[:, :n], np.asarray(dense),
                                rtol=2e-4, atol=2e-4)
-
-
-@hypothesis.settings(max_examples=20, deadline=None)
-@hypothesis.given(
-    n_rows=st.integers(2, 8),
-    k_max=st.integers(1, 4),
-    block=st.sampled_from([8, 16]),
-    f=st.sampled_from([8, 16]),
-    seed=st.integers(0, 2**30),
-)
-def test_cheb_step_property(n_rows, k_max, block, f, seed):
-    """Property: kernel == oracle for arbitrary Block-ELL structures."""
-    key = jax.random.PRNGKey(seed)
-    kb, k1, k2 = jax.random.split(key, 3)
-    blocks = jax.random.normal(kb, (n_rows, k_max, block, block))
-    cols = jax.random.randint(k1, (n_rows, k_max), 0, n_rows).astype(jnp.int32)
-    bell = ref.BlockEll(blocks, cols)
-    t1 = jax.random.normal(k1, (bell.n, f))
-    t2 = jax.random.normal(k2, (bell.n, f))
-    got = cheb_step_pallas(blocks, cols, t1, t2, alpha=2.5, interpret=True)
-    want = ref.cheb_step_ref(bell, t1, t2, 2.5)
-    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
-                               rtol=1e-4, atol=1e-4)
 
 
 def test_kernel_linearity_property():

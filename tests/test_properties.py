@@ -1,15 +1,20 @@
-"""Hypothesis property tests on the system's core invariants."""
+"""Hypothesis property tests on the system's core invariants.
 
-import hypothesis
-import hypothesis.strategies as st
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); the
+whole module is skipped when it is absent.
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+st = pytest.importorskip("hypothesis.strategies")
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chebyshev, gossip, graph, multipliers
 from repro.core.operators import UnionFilterOperator, exact_union_apply
-
-import pytest
 
 
 @pytest.fixture(autouse=True, scope="module")

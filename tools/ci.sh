@@ -1,0 +1,18 @@
+#!/usr/bin/env bash
+# CI entry point: install dev deps and run the tier-1 suite on CPU.
+#
+# All Pallas paths run with interpret=True off-TPU (the backends choose it
+# automatically), so the whole matrix — including the fused union-combine
+# kernel and the multi-device subprocess tests (forced host devices) — is
+# exercised on a plain CPU runner. Collection errors fail the run
+# (pytest exits non-zero on them; --co smoke-checks first for clarity).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -r requirements-dev.txt
+
+# Fail fast and loudly on collection errors (the historical failure mode).
+python -m pytest --collect-only -q > /dev/null
+
+# Tier-1 (ROADMAP.md): full suite, quiet, stop on first failure.
+python -m pytest -x -q
