@@ -2,6 +2,8 @@
 
 from repro.apps.denoising import (
     denoise_tikhonov,
+    denoise_wiener,
+    inverse_filter,
     smooth_heat,
     ssl_classify,
     wavelet_denoise_ista,
@@ -9,6 +11,8 @@ from repro.apps.denoising import (
 
 __all__ = [
     "denoise_tikhonov",
+    "denoise_wiener",
+    "inverse_filter",
     "smooth_heat",
     "ssl_classify",
     "wavelet_denoise_ista",

@@ -9,6 +9,7 @@ from repro.filters.api import GraphFilter
 from repro.filters.registry import (
     FilterBackend,
     available_backends,
+    backend_is_traceable,
     get_backend,
     register_backend,
 )
@@ -18,6 +19,7 @@ __all__ = [
     "FilterBackend",
     "GraphFilter",
     "available_backends",
+    "backend_is_traceable",
     "get_backend",
     "register_backend",
 ]

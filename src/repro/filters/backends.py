@@ -90,6 +90,7 @@ class MatvecBackend:
 
     name = "matvec"
     prepare_opts: frozenset[str] = frozenset()
+    traceable = True  # pure jax iff the caller's matvec is; assume so
 
     def prepare(self, filt, **_):
         return None
@@ -115,6 +116,7 @@ class DenseBackend:
 
     name = "dense"
     prepare_opts: frozenset[str] = frozenset()
+    traceable = True
 
     def prepare(self, filt, **_):
         g = _require_graph(filt, self.name)
@@ -161,6 +163,7 @@ class BsrBackend:
 
     name = "bsr"
     prepare_opts: frozenset[str] = frozenset({"block_size"})
+    traceable = True  # pallas_call (or interpret mode) traces fine in scan
 
     def prepare(self, filt, *, block_size: int = 8, **_):
         g = _require_graph(filt, self.name)
@@ -256,6 +259,9 @@ class _ShardedBackendBase:
 
     name = "halo"
     state_key = "partition_plan"
+    # scatter_signal/gather_signal round-trip through host numpy, so these
+    # backends cannot live inside a lax.scan body.
+    traceable = False
     prepare_opts: frozenset[str] = frozenset({"mesh", "axis", "n_parts"})
 
     def prepare(
@@ -358,6 +364,9 @@ class GridBackend:
     """
 
     name = "grid"
+    # apply/adjoint place inputs with device_put before entering the jitted
+    # shard_map program — a host-side staging step; keep it out of scan.
+    traceable = False
     prepare_opts: frozenset[str] = frozenset(
         {"mesh", "axis", "n_parts", "depth"}
     )

@@ -23,6 +23,7 @@ __all__ = [
     "register_backend",
     "get_backend",
     "available_backends",
+    "backend_is_traceable",
 ]
 
 
@@ -42,10 +43,19 @@ class FilterBackend(Protocol):
         Cache key for prepared state; defaults to ``name``. Backends whose
         ``prepare`` builds identical operands (halo/allgather share one
         partition plan) declare a common value to share the state.
+    traceable : bool
+        Capability flag: True iff ``apply``/``adjoint``/``gram`` stage pure
+        jax ops end to end, so calls can live inside ``jax.lax.scan`` /
+        ``while_loop`` bodies (iterative solvers compile their whole loop).
+        Backends that stage host-side transfers (scatter/gather round-trips
+        through numpy) must declare False — callers then fall back to a
+        host-side Python loop. Consumed via :func:`backend_is_traceable`;
+        absent attribute reads as False (the conservative default).
     """
 
     name: str
     prepare_opts: frozenset[str]
+    traceable: bool
 
     def prepare(self, filt, **opts) -> Any:
         """Build backend state (operands, plans) for ``filt``; called once
@@ -100,3 +110,10 @@ def get_backend(name: str) -> FilterBackend:
 def available_backends() -> tuple[str, ...]:
     """Names of all registered backends, sorted."""
     return tuple(sorted(_REGISTRY))
+
+
+def backend_is_traceable(name: str) -> bool:
+    """True iff backend ``name`` declares the ``traceable`` capability —
+    i.e. its filter calls may be placed inside ``lax.scan``/``while_loop``
+    bodies. Missing attribute counts as False (host-loop fallback)."""
+    return bool(getattr(get_backend(name), "traceable", False))

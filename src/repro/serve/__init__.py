@@ -1,6 +1,7 @@
 from repro.serve.engine import (
     GraphFilterEngine,
     ServeEngine,
+    lasso_panel_solver,
     make_decode_step,
     make_prefill,
 )
@@ -8,6 +9,7 @@ from repro.serve.engine import (
 __all__ = [
     "GraphFilterEngine",
     "ServeEngine",
+    "lasso_panel_solver",
     "make_decode_step",
     "make_prefill",
 ]

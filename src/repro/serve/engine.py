@@ -11,6 +11,13 @@ Two workloads share the static-batching pattern:
   amortizes the whole Krylov sequence (and, on the ``bsr`` backend, feeds
   the fused union-combine kernel MXU-shaped panels). This is the serving
   face of the paper's "one recurrence, eta outputs" economics.
+
+  The same engine serves *iterative solves* (solve-as-a-service): requests
+  queue on a second lane and one compiled FISTA/ISTA/CG run over the
+  packed (N, F) panel answers F clients at once — the solver scan is as
+  F-blind as a single apply, so an entire lasso denoising solve amortizes
+  the same way (DESIGN.md Sec. 7.4). Configure with ``solver=`` (e.g.
+  :func:`lasso_panel_solver`).
 """
 
 from __future__ import annotations
@@ -26,12 +33,14 @@ from repro.filters import GraphFilter
 from repro.models import lm
 from repro.models.config import ModelConfig, ParallelConfig
 from repro.models.sharding import ShardingRules
+from repro.solvers import LassoProblem, SolveResult, solve as solve_problem
 
 __all__ = [
     "make_decode_step",
     "make_prefill",
     "ServeEngine",
     "GraphFilterEngine",
+    "lasso_panel_solver",
 ]
 
 
@@ -121,11 +130,22 @@ class GraphFilterEngine:
     backend: str = "bsr"
     panel_width: int = 8
     opts: dict = dataclasses.field(default_factory=dict)
+    solver: Callable[[jax.Array], SolveResult] | None = None
 
     def __post_init__(self):
         self._pending: list[np.ndarray] = []
+        self._pending_solves: list[np.ndarray] = []
         self.served = 0
         self.applies = 0
+        self.solved = 0
+        self.solves = 0
+        # A lasso_panel_solver built without an explicit backend inherits
+        # the engine's, so the two lanes cannot silently disagree. Bind a
+        # copy: mutating would leak this engine's backend into a solver
+        # object shared with another engine.
+        if getattr(self.solver, "backend", "") is None:
+            self.solver = dataclasses.replace(self.solver,
+                                              backend=self.backend)
 
     def submit(self, signal) -> list[np.ndarray] | None:
         """Queue one (N,) signal; returns the panel's (eta, N) results —
@@ -139,12 +159,7 @@ class GraphFilterEngine:
         """Answer all pending requests now (pads a partial panel)."""
         if not self._pending:
             return None
-        k = len(self._pending)
-        panel = np.stack(self._pending, axis=1)  # (N, k)
-        if panel.dtype == np.float64:  # host inputs default to f64
-            panel = panel.astype(np.float32)
-        if k < self.panel_width:
-            panel = np.pad(panel, ((0, 0), (0, self.panel_width - k)))
+        panel, k = self._pack(self._pending)
         out = self.filt.apply(
             jnp.asarray(panel), backend=self.backend, **self.opts
         )
@@ -153,3 +168,111 @@ class GraphFilterEngine:
         self.served += k
         self.applies += 1
         return [out[:, :, i] for i in range(k)]
+
+    # -- solve-as-a-service lane -----------------------------------------
+
+    def submit_solve(self, signal) -> list[SolveResult] | None:
+        """Queue one (N,) signal for the iterative-solve lane; returns the
+        per-request :class:`SolveResult` list (submission order) when the
+        panel fills."""
+        if self.solver is None:
+            raise ValueError(
+                "engine has no solver=; build one with lasso_panel_solver()"
+            )
+        self._pending_solves.append(np.asarray(signal))
+        if len(self._pending_solves) >= self.panel_width:
+            return self.flush_solves()
+        return None
+
+    def flush_solves(self) -> list[SolveResult] | None:
+        """Solve all pending requests now (pads a partial panel).
+
+        The F queued signals are packed into one (N, F) panel and answered
+        by a SINGLE solver run — on a traceable backend that is one
+        compiled scan/while_loop whose every filter call carries the whole
+        panel. Each caller receives the shared iteration/communication
+        metadata with its own solution column.
+        """
+        if not self._pending_solves:
+            # empty lane drains harmlessly, like flush() — even with no
+            # solver configured
+            return None
+        if self.solver is None:
+            raise ValueError(
+                "engine has no solver=; build one with lasso_panel_solver()"
+            )
+        panel, k = self._pack(self._pending_solves)
+        res = self.solver(jnp.asarray(panel))
+        x = np.asarray(res.x)  # (N, panel_width)
+        aux = None if res.aux is None else np.asarray(res.aux)
+        self._pending_solves.clear()
+        self.solved += k
+        self.solves += 1
+        return [
+            dataclasses.replace(
+                res, x=x[:, i],
+                aux=None if aux is None else aux[..., i],
+            )
+            for i in range(k)
+        ]
+
+    def _pack(self, pending: list[np.ndarray]) -> tuple[np.ndarray, int]:
+        """Stack pending (N,) requests into a fixed-width (N, F) panel."""
+        k = len(pending)
+        panel = np.stack(pending, axis=1)  # (N, k)
+        if panel.dtype == np.float64:  # host inputs default to f64
+            panel = panel.astype(np.float32)
+        if k < self.panel_width:
+            panel = np.pad(panel, ((0, 0), (0, self.panel_width - k)))
+        return panel, k
+
+
+@dataclasses.dataclass
+class _LassoPanelSolver:
+    """Callable ``panel -> SolveResult`` for the engine's solve lane.
+
+    ``backend=None`` means "not yet bound": :class:`GraphFilterEngine`
+    fills it with its own backend at construction so the apply and solve
+    lanes agree; standalone use falls back to ``"bsr"``.
+    """
+
+    filt: GraphFilter
+    method: str
+    mu: float | jax.Array
+    step: float | None
+    n_iters: int
+    tol: float | None
+    backend: str | None
+    opts: dict
+
+    def __call__(self, panel: jax.Array) -> SolveResult:
+        problem = LassoProblem(filt=self.filt, y=panel, mu=self.mu,
+                               step=self.step)
+        return solve_problem(
+            problem, method=self.method, n_iters=self.n_iters,
+            tol=self.tol, backend=self.backend or "bsr", **self.opts)
+
+
+def lasso_panel_solver(
+    filt: GraphFilter,
+    *,
+    method: str = "fista",
+    mu: float | jax.Array = 1.0,
+    step: float | None = None,
+    n_iters: int = 40,
+    tol: float | None = None,
+    backend: str | None = None,
+    **opts,
+) -> Callable[[jax.Array], SolveResult]:
+    """Build a panel solver for :class:`GraphFilterEngine`'s solve lane.
+
+    Returns ``panel -> SolveResult`` running SGWT-lasso denoising
+    (:class:`repro.solvers.LassoProblem`) over the whole (N, F) panel with
+    one ``method`` solve. A fixed panel width upstream keeps every run on
+    identical shapes, so the compiled scan is reused across panels.
+    Leave ``backend=None`` to inherit the owning engine's backend (set it
+    explicitly only to make the lanes deliberately diverge).
+    """
+    return _LassoPanelSolver(filt=filt, method=method, mu=mu, step=step,
+                             n_iters=n_iters, tol=tol, backend=backend,
+                             opts=opts)

@@ -1,0 +1,38 @@
+"""Distributed inverse-problem solvers on :class:`repro.filters.GraphFilter`.
+
+The paper's Sec. V-C denoising, inverse filtering (arXiv:2003.11152) and
+graph Wiener reconstruction (arXiv:2205.04019) are all iterations whose
+every step is a Chebyshev-recurrence filter call — so they run on any
+registered backend, with communication accounted by the backend's
+``messages_per_apply`` model. See DESIGN.md Sec. 7.
+
+Quickstart::
+
+    from repro.solvers import LassoProblem, fista
+
+    problem = LassoProblem(filt=wavelet_filter, y=noisy, mu=2.0)
+    res = fista(problem, n_iters=40, tol=1e-6, backend="bsr")
+    denoised, coeffs = res.x, res.aux
+"""
+
+from repro.solvers.api import GramProblem, LassoProblem, SolveResult
+from repro.solvers.iterative import (
+    conjugate_gradient,
+    fista,
+    ista,
+    solve,
+    wiener,
+)
+from repro.solvers.loops import iterate
+
+__all__ = [
+    "GramProblem",
+    "LassoProblem",
+    "SolveResult",
+    "conjugate_gradient",
+    "fista",
+    "ista",
+    "iterate",
+    "solve",
+    "wiener",
+]

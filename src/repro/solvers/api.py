@@ -1,0 +1,186 @@
+"""Problem definitions and results for the distributed solver layer.
+
+The paper's headline application (Sec. V-C) is an *iterative* distributed
+algorithm: every step is one forward ``Phi~`` and/or one adjoint ``Phi~*``
+through the Chebyshev recurrence. This module names the two inverse
+problems the repo solves on top of :class:`repro.filters.GraphFilter`:
+
+* :class:`LassoProblem` — synthesis/analysis lasso
+  ``argmin_a 1/2 ||y - Phi~* a||^2 + ||a||_{1,mu}`` (paper eq. 20/21; the
+  SGWT denoising experiment). Solved by ``ista`` / ``fista``.
+* :class:`GramProblem` — the regularized normal equations
+  ``(Phi~* Phi~ + reg I) x = b`` — inverse filtering (Emirov et al.,
+  arXiv:2003.11152) and graph Wiener reconstruction (Zheng, Cheng & Sun,
+  arXiv:2205.04019) both reduce to this. Solved by ``conjugate_gradient``,
+  with each iteration one ``GraphFilter.gram`` (a *single* degree-2M
+  filter, Sec. IV-C).
+
+Every solver returns a :class:`SolveResult` carrying the solution, the
+per-iteration history, and the communication accounting derived from the
+backend's ``messages_per_apply`` model.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.filters import GraphFilter
+
+__all__ = ["SolveResult", "LassoProblem", "GramProblem"]
+
+
+@dataclasses.dataclass
+class SolveResult:
+    """Outcome of an iterative solve on a ``GraphFilter``.
+
+    Attributes
+    ----------
+    x : jax.Array
+        The solution in the problem's primal variable — the recovered
+        *signal* for every shipped problem (lasso returns ``Phi~* a``).
+    aux : jax.Array or None
+        Problem-specific auxiliary output: the wavelet/analysis
+        coefficients ``a`` for lasso, the pre-``gram`` latent ``z`` for
+        Wiener reconstruction, None for plain CG.
+    history : numpy.ndarray
+        (iterations,) per-iteration trace — the lasso objective value, or
+        the CG residual norm (worst column for panel solves).
+    iterations : int
+        Iterations actually executed (< ``n_iters`` on early stop).
+    converged : bool
+        True when the tolerance fired (or trivially, when no tolerance was
+        requested and the fixed iteration budget completed).
+    method, backend : str
+        Which solver produced this, on which ``GraphFilter`` backend.
+    messages_per_iteration : int
+        Scalar words exchanged between workers per iteration for one (N,)
+        signal, from the backend's ``messages_per_apply`` model — 0 on
+        single-device backends; for lasso, one length-1 forward plus one
+        length-eta adjoint per iteration (paper Sec. V-C accounting).
+    """
+
+    x: jax.Array
+    aux: Any
+    history: np.ndarray
+    iterations: int
+    converged: bool
+    method: str
+    backend: str
+    messages_per_iteration: int
+
+    @property
+    def messages_total(self) -> int:
+        """Total solve communication: iterations x words/iteration."""
+        return self.iterations * self.messages_per_iteration
+
+
+@dataclasses.dataclass
+class LassoProblem:
+    """``argmin_a 1/2 ||y - Phi~* a||^2 + ||a||_{1,mu}`` (paper Sec. V-C).
+
+    Parameters
+    ----------
+    filt : GraphFilter
+        The union filter ``Phi~`` (for SGWT denoising: the wavelet frame
+        ``W~``, eta = n_scales + 1).
+    y : jax.Array
+        (N,) observation, or (N, F) panel — F independent observations
+        solved in one scan (the serving layer's batched mode).
+    mu : float or jax.Array
+        l1 weights. A scalar penalizes only the wavelet bands — band 0
+        (the low-pass scaling band) carries the signal baseline and gets
+        ``mu_0 = 0``, the standard weighted-lasso choice the paper's
+        ``||a||_{1,mu}`` notation allows. Pass an (eta,) vector for full
+        control.
+    step : float, optional
+        Gradient step tau; defaults to ``1 / ||Phi~||^2`` via
+        ``filt.operator_norm_bound()`` (ISTA/FISTA converge for
+        ``tau < 2 / ||Phi~||^2``, paper ref. [30]).
+    """
+
+    filt: GraphFilter
+    y: jax.Array
+    mu: float | jax.Array = 1.0
+    step: float | None = None
+
+    def step_size(self) -> float:
+        if self.step is not None:
+            return float(self.step)
+        return 1.0 / self.filt.operator_norm_bound()
+
+    def mu_vector(self) -> jax.Array:
+        """(eta,) + (1,)*y.ndim broadcastable l1 weight vector."""
+        y = jnp.asarray(self.y)
+        mu = jnp.asarray(self.mu, dtype=y.dtype)
+        if mu.ndim == 0:
+            mu = jnp.concatenate(
+                [jnp.zeros((1,), y.dtype),
+                 jnp.full((self.filt.eta - 1,), mu, y.dtype)]
+            )
+        if mu.shape != (self.filt.eta,):
+            raise ValueError(
+                f"mu must be scalar or shape ({self.filt.eta},), "
+                f"got {mu.shape}"
+            )
+        return mu.reshape((self.filt.eta,) + (1,) * y.ndim)
+
+    def objective(self, a: jax.Array, *, backend: str = "dense",
+                  **opts) -> float:
+        """Exact lasso objective of coefficients ``a`` (one adjoint)."""
+        resid = jnp.asarray(self.y) - self.filt.adjoint(
+            a, backend=backend, **opts)
+        return float(0.5 * jnp.sum(resid * resid)
+                     + jnp.sum(self.mu_vector() * jnp.abs(a)))
+
+    def messages_per_iteration(self, backend: str, **opts) -> int:
+        """One length-1 forward + one length-eta adjoint per iteration
+        (Sec. V-C): ``m * (1 + eta)`` words with m = words/apply."""
+        m = self.filt.messages_per_apply(backend=backend, **opts)
+        return m * (1 + self.filt.eta)
+
+
+@dataclasses.dataclass
+class GramProblem:
+    """Regularized normal equations ``(Phi~* Phi~ + reg I) x = b``.
+
+    ``reg = 0`` is pure inverse filtering on the Gram operator
+    (arXiv:2003.11152); ``reg = noise_power`` is the Wiener/Tikhonov
+    regularized variant (arXiv:2205.04019). The operator is SPD whenever
+    ``reg > 0`` (and already PSD at reg = 0), so CG applies; each CG
+    iteration costs one ``GraphFilter.gram`` — a single degree-2M filter,
+    i.e. 2M matvecs, half of composing ``adjoint(apply(.))``.
+
+    Parameters
+    ----------
+    filt : GraphFilter
+        The filter whose Gram operator is inverted.
+    b : jax.Array
+        (N,) or (N, F) right-hand side(s) — typically ``Phi~* obs``.
+    reg : float
+        Ridge term added to the Gram operator.
+    """
+
+    filt: GraphFilter
+    b: jax.Array
+    reg: float = 0.0
+
+    def operator(self, backend: str, **opts):
+        """The SPD map ``v -> (Phi~* Phi~ + reg I) v`` on ``backend``."""
+        reg = jnp.asarray(self.reg, dtype=jnp.asarray(self.b).dtype)
+
+        def mv(v):
+            out = self.filt.gram(v, backend=backend, **opts)
+            return out + reg * v
+
+        return mv
+
+    def messages_per_iteration(self, backend: str, **opts) -> int:
+        """One degree-2M gram filter per CG iteration: 4M|E| words in the
+        radio model (Sec. IV-C)."""
+        return self.filt.messages_per_apply(
+            2 * self.filt.order, backend=backend, **opts)

@@ -1,0 +1,118 @@
+"""Iteration engines for the solver layer: compiled scan / while_loop on
+traceable backends, host Python loop otherwise.
+
+Every solver is written as a *step function* ``state -> (state, (trace,
+stop))`` where ``trace`` is the value recorded into the history (objective,
+residual norm) and ``stop`` is the scalar the tolerance test consumes. This
+module owns how that step is driven (DESIGN.md Sec. 7.3):
+
+* backend declares ``traceable`` and no tolerance — ``jax.lax.scan``: the
+  whole solve is one compiled loop, n_iters known statically.
+* traceable + tolerance — ``jax.lax.while_loop`` with the history written
+  into a preallocated buffer: early exit without leaving the device.
+* non-traceable backend (halo/allgather/grid stage host transfers) — plain
+  Python loop with an eager ``break``; correctness is identical, the loop
+  body itself still runs compiled per call.
+
+The dispatch consumes the per-backend capability flag via
+``repro.filters.backend_is_traceable`` — no solver or app hardcodes backend
+names.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["iterate"]
+
+StepFn = Callable[[Any], Tuple[Any, Tuple[jax.Array, jax.Array]]]
+
+
+def iterate(
+    step: StepFn,
+    init: Any,
+    *,
+    n_iters: int,
+    tol: float | None,
+    traceable: bool,
+) -> tuple[Any, np.ndarray, int, bool]:
+    """Drive ``step`` for up to ``n_iters`` iterations.
+
+    Parameters
+    ----------
+    step : callable
+        ``state -> (state, (trace, stop))`` — pure jax when ``traceable``.
+    init : pytree
+        Initial state.
+    n_iters : int
+        Iteration budget (the exact count when ``tol`` is None).
+    tol : float, optional
+        Early-stop threshold on ``stop``; None means a fixed-count loop.
+    traceable : bool
+        Whether ``step`` may be placed inside ``lax.scan``/``while_loop``.
+
+    Returns
+    -------
+    (state, history, iterations, converged)
+        ``history`` is a float64 numpy array of the recorded traces, one
+        per executed iteration. ``converged`` is True when the tolerance
+        fired, or when no tolerance was requested and the budget ran.
+    """
+    if n_iters < 0:
+        raise ValueError(f"n_iters must be >= 0, got {n_iters}")
+    if n_iters == 0:
+        return init, np.zeros((0,), np.float64), 0, tol is None
+
+    if not traceable:
+        return _host_loop(step, init, n_iters, tol)
+    if tol is None:
+        return _scan_loop(step, init, n_iters)
+    return _while_loop(step, init, n_iters, tol)
+
+
+def _scan_loop(step, init, n_iters):
+    def body(state, _):
+        state, (trace, stop) = step(state)
+        return state, jnp.asarray(trace, jnp.float32)
+
+    state, hist = jax.lax.scan(body, init, None, length=n_iters)
+    return state, np.asarray(hist, np.float64), n_iters, True
+
+
+def _while_loop(step, init, n_iters, tol):
+    hist0 = jnp.full((n_iters,), jnp.nan, jnp.float32)
+
+    def cond(carry):
+        _, k, _, stop = carry
+        return jnp.logical_and(k < n_iters, stop > tol)
+
+    def body(carry):
+        state, k, hist, _ = carry
+        state, (trace, stop) = step(state)
+        hist = hist.at[k].set(jnp.asarray(trace, jnp.float32))
+        return state, k + 1, hist, jnp.asarray(stop, jnp.float32)
+
+    state, k, hist, stop = jax.lax.while_loop(
+        cond, body, (init, jnp.asarray(0), hist0, jnp.asarray(jnp.inf,
+                                                              jnp.float32))
+    )
+    k = int(k)
+    return (state, np.asarray(hist, np.float64)[:k], k,
+            bool(stop <= tol))
+
+
+def _host_loop(step, init, n_iters, tol):
+    state = init
+    hist: list[float] = []
+    converged = tol is None
+    for _ in range(n_iters):
+        state, (trace, stop) = step(state)
+        hist.append(float(trace))
+        if tol is not None and float(stop) <= tol:
+            converged = True
+            break
+    return state, np.asarray(hist, np.float64), len(hist), converged

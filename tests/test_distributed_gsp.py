@@ -24,7 +24,7 @@ def _run_example(name: str) -> str:
     env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
     proc = subprocess.run(
         [sys.executable, str(REPO / "examples" / name)],
-        capture_output=True, text=True, env=env, timeout=600,
+        capture_output=True, text=True, env=env, timeout=900,
     )
     assert proc.returncode == 0, f"{name} failed:\n{proc.stdout}\n{proc.stderr}"
     return proc.stdout

@@ -16,8 +16,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import chebyshev, graph, multipliers
-from repro.filters import GraphFilter, available_backends, get_backend
+from repro.core import chebyshev, graph, multipliers, operators
+from repro.filters import (
+    GraphFilter,
+    available_backends,
+    backend_is_traceable,
+    get_backend,
+)
 from repro.kernels import ops as kops
 
 REPO = Path(__file__).resolve().parents[1]
@@ -100,6 +105,95 @@ def test_gram_equals_adjoint_of_apply(sensor_setting, backend):
     gram = filt.gram(f, backend=backend)
     np.testing.assert_allclose(
         np.asarray(gram), np.asarray(composed), rtol=5e-4, atol=5e-4)
+
+
+# ------------------------------------------------ exact-oracle parity --
+#
+# Polynomial multipliers of degree <= order make the truncated Chebyshev
+# expansion *exact* (quadrature included), so every backend's apply /
+# adjoint / gram must match the eigendecomposition oracle
+# (core/operators.exact_union_apply and friends) to float tolerance — not
+# just match each other. This pins adjoint and gram, which the rest of
+# the suite exercises far less than apply, on ALL registered backends
+# including grid.
+
+POLY_BANK = [
+    lambda x: 0.3 + 0.1 * np.asarray(x, np.float64),
+    lambda x: 1.0 - 0.25 * np.asarray(x, np.float64)
+    + 0.05 * np.asarray(x, np.float64) ** 2,
+]
+
+
+def _oracle_filter_and_graph(backend):
+    if backend == "grid":
+        g = graph.grid_graph(16)
+        lmax = 8.0
+    else:
+        g = graph.connected_sensor_graph(
+            jax.random.PRNGKey(9), n=96, sigma=0.17, kappa=0.18)
+        lmax = float(g.lmax_bound())
+    filt = GraphFilter.from_multipliers(POLY_BANK, order=8, graph=g,
+                                        lmax=lmax)
+    opts = {}
+    if backend == "matvec":
+        # tensordot, not @: the adjoint recurrence carries the eta blocks
+        # in trailing dims, so the closure must contract the vertex axis.
+        lap = g.laplacian()
+        opts["matvec"] = lambda v: jnp.tensordot(lap, v, axes=1)
+    return g, filt, opts
+
+
+@pytest.mark.parametrize("backend", sorted(
+    ("dense", "bsr", "halo", "allgather", "grid", "matvec")))
+def test_apply_matches_exact_oracle(backend):
+    g, filt, opts = _oracle_filter_and_graph(backend)
+    f = jax.random.normal(jax.random.PRNGKey(10), (g.n_vertices, 4))
+    want = operators.exact_union_apply(
+        np.asarray(g.laplacian(), np.float64), POLY_BANK, np.asarray(f))
+    got = filt.apply(f, backend=backend, **opts)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", sorted(
+    ("dense", "bsr", "halo", "allgather", "grid", "matvec")))
+def test_adjoint_matches_exact_oracle(backend):
+    """``Phi~* a = sum_j Psi_j a_j`` (symmetric Psi_j) vs the eigh oracle."""
+    g, filt, opts = _oracle_filter_and_graph(backend)
+    a = jax.random.normal(jax.random.PRNGKey(11),
+                          (filt.eta, g.n_vertices, 4))
+    mats = operators.exact_multiplier_matrix(
+        np.asarray(g.laplacian(), np.float64), POLY_BANK)
+    want = np.einsum("jnm,jmf->nf", mats, np.asarray(a, np.float64))
+    got = filt.adjoint(a, backend=backend, **opts)
+    assert got.shape == (g.n_vertices, 4)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-4,
+                               atol=1e-4)
+
+
+@pytest.mark.parametrize("backend", sorted(
+    ("dense", "bsr", "halo", "allgather", "grid", "matvec")))
+def test_gram_matches_exact_oracle(backend):
+    """The single degree-2M gram filter vs ``sum_j Psi_j^2 f`` (eigh)."""
+    g, filt, opts = _oracle_filter_and_graph(backend)
+    f = jax.random.normal(jax.random.PRNGKey(12), (g.n_vertices, 4))
+    mats = operators.exact_multiplier_matrix(
+        np.asarray(g.laplacian(), np.float64), POLY_BANK)
+    want = sum(m @ (m @ np.asarray(f, np.float64)) for m in mats)
+    got = filt.gram(f, backend=backend, **opts)
+    assert got.shape == f.shape
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-4,
+                               atol=2e-4)
+
+
+def test_traceable_flags_match_backend_contract():
+    """The capability flag that replaced apps/denoising's hardcoded
+    backend-name tuple: compiled-loop backends declare it, host-staging
+    backends do not."""
+    want = {"dense": True, "bsr": True, "matvec": True,
+            "halo": False, "allgather": False, "grid": False}
+    for name, flag in want.items():
+        assert backend_is_traceable(name) == flag, name
 
 
 def test_matvec_backend_matches_dense(sensor_setting):

@@ -1,5 +1,6 @@
 #!/usr/bin/env bash
-# CI entry point: install dev deps and run the tier-1 suite on CPU.
+# CI entry point: install dev deps, lint, run the tier-1 suite on CPU,
+# and smoke-run the quickstart example so example drift is caught.
 #
 # All Pallas paths run with interpret=True off-TPU (the backends choose it
 # automatically), so the whole matrix — including the fused union-combine
@@ -9,10 +10,25 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+# Purge stray __pycache__ noise from the working tree before anything can
+# import it (stale bytecode has shadowed real modules before).
+find . -name __pycache__ -prune -exec rm -rf {} +
+
 python -m pip install -r requirements-dev.txt
+
+# Lint (ruff ships in requirements-dev; gate so minimal local environments
+# without it can still run the suite).
+if python -m ruff --version >/dev/null 2>&1; then
+  python -m ruff check .
+else
+  echo "ruff unavailable; skipping lint" >&2
+fi
 
 # Fail fast and loudly on collection errors (the historical failure mode).
 python -m pytest --collect-only -q > /dev/null
 
 # Tier-1 (ROADMAP.md): full suite, quiet, stop on first failure.
 python -m pytest -x -q
+
+# Example-drift smoke: the README quickstart must keep running as written.
+PYTHONPATH=src python examples/quickstart.py
