@@ -14,6 +14,9 @@ writes the machine-readable perf-trajectory record ``BENCH_<tag>.json``
   tab_solvers          solver layer — ISTA vs FISTA vs CG on the Sec. V-C
                        benchmark graph: iterations-to-tolerance, wall
                        time, words/iteration per backend
+  tab_streaming        streaming lane — full refilter vs delta filtering
+                       (words/frame + wall time vs change fraction, output
+                       parity) and warm-started vs cold solver iterations
   tab_roofline         summary of the dry-run roofline table (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--full] [--tag TAG]
@@ -37,6 +40,7 @@ from repro.filters import GraphFilter, get_backend
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 from repro.solvers import GramProblem, LassoProblem, conjugate_gradient, fista, ista
+from repro.stream import StreamingFilter, StreamingWiener
 
 ROWS: list[tuple[str, float, str]] = []
 RECORDS: list[dict] = []
@@ -399,6 +403,117 @@ def tab_solvers(full: bool) -> None:
             messages=w)
 
 
+# ---------------------------------------------------------- streaming --
+
+
+def tab_streaming(full: bool) -> None:
+    """Streaming lane (DESIGN.md Sec. 8). Delta rows: an 80x80 grid scene
+    (N=6400, order 20, 8 partitions) where a square patch of vertices
+    changes between frames — per-frame halo words and wall time for delta
+    filtering vs a full refilter across change fractions, with output
+    parity vs the full apply. Warm-start rows: cold vs seeded solver
+    iterations on the Sec. V-C sensor benchmark (the ISSUE-4 acceptance
+    rows)."""
+    rng = np.random.default_rng(11)
+    side, order, n_parts = 80, 20, 8
+    gg = graph.grid_graph(side)
+    n = side * side
+    filt = GraphFilter.from_multipliers(
+        [multipliers.tikhonov(1.0, 1)], order, graph=gg, lmax=8.0)
+    f0 = (np.asarray(gg.coords[:, 0] ** 2 + gg.coords[:, 1] ** 2,
+                     np.float32))
+    shape = f"N={n},M={order},P={n_parts}"
+
+    lane = StreamingFilter(filt, backend="dense", n_parts=n_parts,
+                           max_delta_frac=0.5)
+    lane.push(f0)  # cold frame
+    words_full = lane._full_words()
+
+    def timed_push(y):
+        # Best of 3 replays; the first pays the bucket's compile and the
+        # min discards it (plus any descheduling blip on a shared host).
+        best, res = None, None
+        for _ in range(3):
+            lane.reset()
+            lane.push(f0)
+            t0 = time.perf_counter()
+            res = lane.push(y)
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        return res, best * 1e6
+
+    us_full = _timeit(lambda: filt.apply(jnp.asarray(f0), backend="dense"))
+    row("tab_streaming_full_refilter", us_full,
+        f"words_per_frame={words_full}", backend="dense", shape=shape,
+        messages=words_full)
+
+    for frac, patch in ((0.02, 11), (0.05, 18), (0.10, 25), (0.25, 40)):
+        y = f0.copy()
+        r0, c0 = rng.integers(0, side - patch, size=2)
+        rr, cc = np.meshgrid(np.arange(r0, r0 + patch),
+                             np.arange(c0, c0 + patch), indexing="ij")
+        ch = (rr * side + cc).ravel()
+        y[ch] += rng.normal(size=len(ch)).astype(np.float32) * 0.3
+        res, us = timed_push(y)
+        parity = float(np.max(np.abs(
+            res.out - np.asarray(filt.apply(jnp.asarray(y),
+                                            backend="dense")))))
+        row(f"tab_streaming_delta_c{int(frac * 100):02d}", us,
+            f"mode={res.mode};changed={res.changed};active={res.active}"
+            f";words_per_frame={res.words};words_full={words_full}"
+            f";words_ratio={res.words / words_full:.3f}"
+            f";parity_vs_full={parity:.1e}",
+            backend="dense", shape=shape, messages=res.words)
+
+    # Warm-started solvers on a slowly varying scene (Sec. V-C sensor
+    # benchmark): frame 1 perturbs 2% of frame 0's vertices. (a)
+    # Wiener/CG: iterations to tol, cold vs seeded with frame 0's latent.
+    # (b) FISTA: iterations until the warm run's objective history
+    # crosses the cold run's final objective.
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(11), n=500)
+    ns = g.n_vertices
+    shape = f"N={ns},M={order},P={n_parts}"
+    fs = np.asarray(g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2 - 1.0,
+                    np.float32)
+    y0 = fs + 0.5 * rng.normal(size=ns).astype(np.float32)
+    y1 = y0.copy()
+    ch = rng.choice(ns, size=ns // 50, replace=False)
+    y1[ch] += 0.3 * rng.normal(size=len(ch)).astype(np.float32)
+
+    wfilt = GraphFilter.from_multipliers(
+        [multipliers.heat(0.5)], order, graph=g)
+    wlane = StreamingWiener(wfilt, 0.25, tol=1e-6, n_iters=200)
+    it0 = wlane.push(y0).iterations
+    t0 = time.perf_counter()
+    it1 = wlane.push(y1).iterations
+    us = (time.perf_counter() - t0) * 1e6
+    wlane.reset()
+    cold1 = wlane.push(y1).iterations
+    row("tab_streaming_warm_wiener", us,
+        f"cold_iters={cold1};warm_iters={it1};frame0_iters={it0}"
+        f";tol=1e-6;saved={cold1 - it1}",
+        backend="dense", shape=shape)
+
+    lmax = float(g.lmax_bound())
+    sfilt = GraphFilter.from_multipliers(
+        multipliers.sgwt_filter_bank(lmax, n_scales=3), order,
+        graph=g, lmax=lmax)
+    budget = 120
+    p1 = LassoProblem(filt=sfilt, y=jnp.asarray(y1), mu=2.0)
+    cold0 = fista(LassoProblem(filt=sfilt, y=jnp.asarray(y0), mu=2.0),
+                  n_iters=budget)
+    coldr = fista(p1, n_iters=budget)
+    warmr = fista(p1, a0=cold0.aux, n_iters=budget)
+    target = float(coldr.history[-1]) * (1.0 + 1e-6)
+    hit = np.nonzero(warmr.history <= target)[0]
+    warm_iters = int(hit[0]) if hit.size else budget
+    row("tab_streaming_warm_fista", 0.0,
+        f"cold_iters={budget};warm_iters_to_cold_obj={warm_iters}"
+        f";target_obj={target:.4f}"
+        f";warm_final_obj={p1.objective(warmr.aux):.4f}",
+        backend="dense", shape=shape)
+
+
 # ----------------------------------------------------------- roofline --
 
 
@@ -421,7 +536,7 @@ def tab_roofline(full: bool) -> None:
 
 BENCHES = [fig4_cheb_approx, tab_denoising, tab_comm_scaling,
            tab_wavelet_ista, tab_gossip, tab_kernel, tab_filter_backends,
-           tab_solvers, tab_roofline]
+           tab_solvers, tab_streaming, tab_roofline]
 
 
 def main() -> None:

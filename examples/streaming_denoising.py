@@ -1,0 +1,108 @@
+"""Streaming denoising over a frame sequence (DESIGN.md Sec. 8).
+
+A moving hot-spot walks across an 80x80 grid scene: each frame differs
+from the previous one on a small square patch. The streaming lane filters
+only the delta — the Chebyshev recurrence of a sparsely supported change
+touches just its order-hop neighbourhood — so halo words and wall time
+per frame track the boundary of change, not N. A warm-started Wiener lane
+then reconstructs a slowly varying sensor stream in fewer CG iterations
+per frame than a cold solve.
+
+Run: PYTHONPATH=src python examples/streaming_denoising.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import graph, multipliers
+from repro.filters import GraphFilter
+from repro.serve.engine import GraphFilterEngine
+from repro.stream import StreamingFilter, StreamingWiener
+
+
+def main() -> None:
+    side, order, n_parts, patch = 64, 20, 8, 9
+    g = graph.grid_graph(side)
+    n = side * side
+    rng = np.random.default_rng(3)
+    base = np.asarray(
+        g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2, np.float32
+    ) + 0.3 * rng.normal(size=n).astype(np.float32)
+
+    filt = GraphFilter.from_multipliers(
+        [multipliers.tikhonov(1.0, 1)], order, graph=g, lmax=8.0
+    )
+
+    # -- delta filtering: a hot spot moving one patch-width per frame ----
+    lane = StreamingFilter(filt, backend="dense", n_parts=n_parts)
+    frames = []
+    y = base.copy()
+    for t in range(6):
+        r0, c0 = 8 + 6 * t, 12 + 5 * t
+        rr, cc = np.meshgrid(
+            np.arange(r0, r0 + patch), np.arange(c0, c0 + patch), indexing="ij"
+        )
+        y = y.copy()
+        y[(rr * side + cc).ravel()] += 0.8
+        frames.append(y)
+
+    print(f"{'frame':>5s} {'mode':>6s} {'changed':>8s} {'active':>7s} "
+          f"{'words':>7s} {'words/full':>10s}")
+    full_words = order * lane._plan.halo_words
+    for y_t in frames:
+        res = lane.push(y_t)
+        print(f"{res.frame:5d} {res.mode:>6s} {res.changed:8d} "
+              f"{res.active:7d} {res.words:7d} "
+              f"{res.words / full_words:10.3f}")
+        # every frame's output equals the full refilter, to float tolerance
+        ref = np.asarray(filt.apply(jnp.asarray(y_t), backend="dense"))
+        err = float(np.max(np.abs(res.out - ref)))
+        assert err < 1e-5, f"delta output deviates from full refilter: {err}"
+    assert lane.delta_frames >= len(frames) - 1, "delta path did not engage"
+
+    # -- the engine's streaming lane: same thing, served ------------------
+    eng = GraphFilterEngine(
+        filt, backend="dense", panel_width=4, stream_opts={"n_parts": n_parts}
+    )
+    served = []
+    for y_t in frames:
+        out = eng.submit_frame("scene-0", y_t)
+        if out:
+            served.extend(out)
+    served.extend(eng.flush_frames() or [])
+    assert [r.frame for r in served] == list(range(len(frames)))
+    print(f"engine: {eng.frames_served} frames, "
+          f"{eng.stream_words} total halo words, "
+          f"{1e3 * eng.stream_latency_s / eng.frames_served:.1f} ms/frame")
+
+    # -- warm-started Wiener reconstruction on a sensor stream -----------
+    key = jax.random.PRNGKey(5)
+    kg, kn = jax.random.split(key)
+    gs = graph.connected_sensor_graph(kg, n=400, sigma=0.085, kappa=0.086)
+    ns = gs.n_vertices
+    wfilt = GraphFilter.from_multipliers(
+        [multipliers.heat(0.5)], order, graph=gs
+    )
+    scene = np.asarray(
+        gs.coords[:, 0] ** 2 + gs.coords[:, 1] ** 2 - 1.0, np.float32
+    )
+    ys = [scene + 0.5 * np.asarray(jax.random.normal(kn, (ns,)), np.float32)]
+    for t in range(3):
+        nxt = ys[-1].copy()
+        ch = rng.choice(ns, size=ns // 50, replace=False)
+        nxt[ch] += 0.2 * rng.normal(size=len(ch)).astype(np.float32)
+        ys.append(nxt)
+
+    wlane = StreamingWiener(wfilt, noise_power=0.25, tol=1e-6, n_iters=200)
+    warm_iters = [wlane.push(y_t).iterations for y_t in ys]
+    wlane.reset()
+    cold_last = wlane.push(ys[-1]).iterations
+    print(f"wiener CG iterations/frame warm-started: {warm_iters} "
+          f"(cold solve of the last frame: {cold_last})")
+    assert warm_iters[-1] <= cold_last
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

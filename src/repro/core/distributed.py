@@ -77,6 +77,56 @@ class PartitionPlan:
     def n_parts(self) -> int:
         return self.l_own.shape[0]
 
+    def owner_of(self) -> np.ndarray:
+        """(N,) partition owning each *original* (unpermuted) vertex."""
+        inv = np.empty(self.n, dtype=np.int64)
+        inv[self.order[: self.n]] = np.arange(self.n)
+        return inv // self.n_local
+
+    def vertex_send_counts(self, adjacency) -> np.ndarray:
+        """(N,) per-vertex halo fan-out: how many *other* partitions each
+        vertex is sent to per matvec in which it is active.
+
+        A boundary vertex is sent once per neighbouring partition (not once
+        per edge), so summing this vector over all vertices reproduces
+        ``halo_words`` exactly — the delta-support accounting below is the
+        same model restricted to the active set.
+        """
+        a = np.asarray(adjacency) != 0.0
+        owner = self.owner_of()
+        counts = np.zeros(self.n, dtype=np.int64)
+        for p in range(self.n_parts):
+            has_nbr_in_p = a[:, owner == p].any(axis=1)
+            counts += (has_nbr_in_p & (owner != p)).astype(np.int64)
+        return counts
+
+    def delta_halo_words(
+        self, adjacency, support, order: int, *, counts=None
+    ) -> int:
+        """Halo words for one delta apply of a signal supported on ``S``.
+
+        Recurrence step k consumes ``T_{k-1}``, supported on the (k-1)-hop
+        neighbourhood of S, so only active boundary vertices are exchanged:
+        ``words = sum_{k=0}^{M-1} sum_{v in N_k(S)} send_counts[v]``. With
+        full support every term equals ``halo_words`` and the total reduces
+        to the dense model ``order * halo_words`` (tested). Pass a
+        precomputed ``counts=vertex_send_counts(adjacency)`` when calling
+        per frame (the streaming layer caches it once per stream).
+        """
+        if counts is None:
+            counts = self.vertex_send_counts(adjacency)
+        mask = np.asarray(support, dtype=bool)
+        words = 0
+        for k in range(order):
+            step_words = int(counts[mask].sum())
+            words += step_words
+            if mask.all():
+                # Saturated: every remaining step costs the full halo.
+                words += step_words * (order - 1 - k)
+                break
+            mask = graph_lib.khop_neighborhood(adjacency, mask, 1)
+        return words
+
 
 def build_partition_plan(
     adjacency, coords, n_parts: int, dtype=jnp.float32

@@ -34,6 +34,7 @@ __all__ = [
     "lmax_upper_bound",
     "lmax_power_iteration",
     "is_connected",
+    "khop_neighborhood",
     "spatial_partition_order",
 ]
 
@@ -222,6 +223,41 @@ def is_connected(adjacency) -> bool:
         seen |= nxt
         frontier = nxt
     return bool(seen.all())
+
+
+def khop_neighborhood(adjacency, support, k: int) -> np.ndarray:
+    """Boolean mask of vertices within ``k`` hops of ``support`` (host BFS).
+
+    This is the locality set of the Chebyshev recurrence: a signal
+    supported on S has ``T_k(L) f`` supported inside ``N_k(S)`` (every
+    length-k walk from S stays within k hops of S), which is what lets the
+    streaming layer filter a sparse frame delta on the induced submatrix of
+    L over ``N_M(S)`` exactly (DESIGN.md Sec. 8).
+
+    Args:
+      adjacency: (N, N) weight matrix (only the zero pattern is used).
+      support: (N,) boolean mask (or index array) of the seed set S.
+      k: hop count >= 0.
+
+    Returns:
+      (N,) numpy boolean mask of ``N_k(S)``, including S itself.
+    """
+    a = np.asarray(adjacency) != 0.0
+    n = a.shape[0]
+    support = np.asarray(support)
+    if support.dtype != np.bool_:
+        mask = np.zeros(n, dtype=bool)
+        mask[support] = True
+    else:
+        mask = support.copy()
+    frontier = mask.copy()
+    for _ in range(k):
+        if not frontier.any():
+            break
+        reached = a[frontier].any(axis=0)
+        frontier = reached & ~mask
+        mask |= reached
+    return mask
 
 
 def spatial_partition_order(coords, n_parts: int) -> np.ndarray:

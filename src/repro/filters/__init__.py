@@ -10,6 +10,7 @@ from repro.filters.registry import (
     FilterBackend,
     available_backends,
     backend_is_traceable,
+    backend_supports_sparse,
     get_backend,
     register_backend,
 )
@@ -20,6 +21,7 @@ __all__ = [
     "GraphFilter",
     "available_backends",
     "backend_is_traceable",
+    "backend_supports_sparse",
     "get_backend",
     "register_backend",
 ]

@@ -208,6 +208,45 @@ class GraphFilter:
         be = registry.get_backend(backend)
         return be.apply(self, self._backend_state(be, opts), f, **opts)
 
+    def apply_sparse(
+        self,
+        delta: jax.Array,
+        support,
+        *,
+        backend: str = "dense",
+        **opts,
+    ) -> jax.Array:
+        """Apply ``Phi~`` to a signal supported on a sparse vertex set.
+
+        The streaming layer's delta path (DESIGN.md Sec. 8): when ``delta``
+        is nonzero only on ``support``, the degree-M recurrence touches
+        only the M-hop neighbourhood of that set, so backends declaring the
+        ``sparse_input`` capability run it on the induced submatrix —
+        cost (flops and halo words) scales with the neighbourhood size,
+        not N. Backends without the capability fall back to a full
+        ``apply`` (identical output, no savings).
+
+        Parameters
+        ----------
+        delta : jax.Array
+            (N,) or (N, F) signal, zero outside ``support``.
+        support : array-like
+            (N,) boolean mask (or index array) of the nonzero vertices.
+        backend : str
+            Registered backend name.
+
+        Returns
+        -------
+        jax.Array
+            (eta,) + delta.shape — equal to ``apply(delta)`` up to float
+            tolerance, zero outside the M-hop reach of ``support``.
+        """
+        be = registry.get_backend(backend)
+        if not getattr(be, "sparse_input", False):
+            return self.apply(delta, backend=backend, **opts)
+        state = self._backend_state(be, opts)
+        return be.apply_sparse(self, state, delta, support, **opts)
+
     def adjoint(
         self, a: jax.Array, *, backend: str = "dense", **opts
     ) -> jax.Array:

@@ -78,6 +78,30 @@ def _default_mesh(axis: str, n_parts: int | None) -> Mesh:
     return compat.make_mesh((n,), (axis,))
 
 
+_SPARSE_BUCKET_MIN = 32
+
+
+def _bucket_size(n: int, cap: int) -> int:
+    """Round ``n`` up to a power-of-two bucket (capped at ``cap``) so the
+    restricted delta apply compiles once per bucket, not once per frame."""
+    b = _SPARSE_BUCKET_MIN
+    while b < n:
+        b *= 2
+    return min(b, cap)
+
+
+@jax.jit
+def _restricted_cheb_apply(lap_sub, d_sub, coeffs, lmax):
+    """Recurrence on the induced submatrix over the order-hop reach.
+
+    Exact, not approximate: every length-k walk (k <= M) from the delta's
+    support stays inside the M-hop neighbourhood, so the polynomial in the
+    *submatrix* of L (true degrees on the diagonal) agrees with the full
+    filter on that neighbourhood — see DESIGN.md Sec. 8.
+    """
+    return chebyshev.cheb_apply(lambda v: lap_sub @ v, d_sub, coeffs, lmax)
+
+
 @register_backend
 class MatvecBackend:
     """Graph-free backend: the caller supplies the Laplacian action.
@@ -117,10 +141,49 @@ class DenseBackend:
     name = "dense"
     prepare_opts: frozenset[str] = frozenset()
     traceable = True
+    sparse_input = True
 
     def prepare(self, filt, **_):
         g = _require_graph(filt, self.name)
         return g.laplacian()
+
+    def apply_sparse(
+        self, filt, lap, delta, support, *, coeffs=None, reach=None, **_
+    ):
+        """``Phi~ delta`` for ``delta`` supported on ``support``: run the
+        recurrence on the induced submatrix over the M-hop reach only.
+
+        The submatrix size is rounded up to a power-of-two bucket so a
+        stream of slightly-varying change sets reuses a handful of
+        compiled programs instead of retracing every frame. ``reach=``
+        takes a precomputed M-hop neighbourhood mask (the streaming layer
+        already walks it for the words accounting); when omitted it is
+        recomputed here.
+        """
+        c = _coeffs_or(filt, coeffs)
+        g = _require_graph(filt, self.name)
+        order = c.shape[1] - 1
+        if reach is None:
+            reach = graph_lib.khop_neighborhood(g.adjacency, support, order)
+        idx = np.nonzero(reach)[0]
+        delta = jnp.asarray(delta)
+        n = delta.shape[0]
+        b = _bucket_size(len(idx), n)
+        if b >= n:
+            # Reach covers (almost) the whole graph — restriction buys
+            # nothing; the full apply is the same work without the scatter.
+            return self.apply(filt, lap, delta, coeffs=coeffs)
+        squeeze = delta.ndim == 1
+        d2 = delta[:, None] if squeeze else delta
+        lap_sub = jnp.zeros((b, b), lap.dtype)
+        lap_sub = lap_sub.at[: len(idx), : len(idx)].set(lap[idx][:, idx])
+        d_sub = jnp.zeros((b,) + d2.shape[1:], d2.dtype).at[: len(idx)].set(d2[idx])
+        out_sub = _restricted_cheb_apply(
+            lap_sub, d_sub, jnp.asarray(c, d2.dtype), jnp.asarray(filt.lmax, d2.dtype)
+        )
+        out = jnp.zeros((c.shape[0],) + d2.shape, d2.dtype)
+        out = out.at[:, idx].set(out_sub[:, : len(idx)])
+        return out[:, :, 0] if squeeze else out
 
     def apply(self, filt, lap, f, *, coeffs=None, **_):
         c = _coeffs_or(filt, coeffs)

@@ -24,6 +24,7 @@ __all__ = [
     "get_backend",
     "available_backends",
     "backend_is_traceable",
+    "backend_supports_sparse",
 ]
 
 
@@ -51,6 +52,14 @@ class FilterBackend(Protocol):
         through numpy) must declare False — callers then fall back to a
         host-side Python loop. Consumed via :func:`backend_is_traceable`;
         absent attribute reads as False (the conservative default).
+    sparse_input : bool, optional
+        Capability flag: True iff the backend implements ``apply_sparse``
+        — applying the filter to a signal supported on a sparse vertex set
+        by restricting the recurrence to its order-hop neighbourhood
+        (the streaming layer's delta path, DESIGN.md Sec. 8). Absent reads
+        as False; ``GraphFilter.apply_sparse`` then falls back to a full
+        ``apply`` (correct, no savings). Consumed via
+        :func:`backend_supports_sparse`.
     """
 
     name: str
@@ -117,3 +126,10 @@ def backend_is_traceable(name: str) -> bool:
     i.e. its filter calls may be placed inside ``lax.scan``/``while_loop``
     bodies. Missing attribute counts as False (host-loop fallback)."""
     return bool(getattr(get_backend(name), "traceable", False))
+
+
+def backend_supports_sparse(name: str) -> bool:
+    """True iff backend ``name`` declares the ``sparse_input`` capability —
+    i.e. it implements ``apply_sparse`` (restricted-support delta filtering).
+    Missing attribute counts as False (full-apply fallback)."""
+    return bool(getattr(get_backend(name), "sparse_input", False))

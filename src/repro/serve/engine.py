@@ -18,6 +18,13 @@ Two workloads share the static-batching pattern:
   F-blind as a single apply, so an entire lasso denoising solve amortizes
   the same way (DESIGN.md Sec. 7.4). Configure with ``solver=`` (e.g.
   :func:`lasso_panel_solver`).
+
+  A third lane serves *streams* (``submit_frame`` / ``flush_frames``):
+  frames keyed by stream id are answered by per-stream
+  :class:`repro.stream.StreamingFilter` state, so consecutive frames of a
+  slowly varying signal pay delta-filtering work proportional to the
+  boundary of change, not N — with per-frame latency and halo-words
+  accounting on the engine (DESIGN.md Sec. 8).
 """
 
 from __future__ import annotations
@@ -34,6 +41,7 @@ from repro.models import lm
 from repro.models.config import ModelConfig, ParallelConfig
 from repro.models.sharding import ShardingRules
 from repro.solvers import LassoProblem, SolveResult, solve as solve_problem
+from repro.stream import FrameResult, StreamingFilter
 
 __all__ = [
     "make_decode_step",
@@ -124,6 +132,10 @@ class GraphFilterEngine:
         F dimension of the served panel; requests per apply.
     opts : dict
         Extra backend options forwarded to every apply.
+    stream_opts : dict
+        Keyword options for the per-stream
+        :class:`repro.stream.StreamingFilter` lanes (``max_delta_frac``,
+        ``refresh_every``, ``n_parts``, ...).
     """
 
     filt: GraphFilter
@@ -131,14 +143,20 @@ class GraphFilterEngine:
     panel_width: int = 8
     opts: dict = dataclasses.field(default_factory=dict)
     solver: Callable[[jax.Array], SolveResult] | None = None
+    stream_opts: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         self._pending: list[np.ndarray] = []
         self._pending_solves: list[np.ndarray] = []
+        self._pending_frames: list[tuple[Any, np.ndarray]] = []
+        self._streams: dict[Any, StreamingFilter] = {}
         self.served = 0
         self.applies = 0
         self.solved = 0
         self.solves = 0
+        self.frames_served = 0
+        self.stream_words = 0
+        self.stream_latency_s = 0.0
         # A lasso_panel_solver built without an explicit backend inherits
         # the engine's, so the two lanes cannot silently disagree. Bind a
         # copy: mutating would leak this engine's backend into a solver
@@ -215,6 +233,51 @@ class GraphFilterEngine:
             )
             for i in range(k)
         ]
+
+    # -- streaming lane ---------------------------------------------------
+
+    def submit_frame(self, stream_id, frame) -> list[FrameResult] | None:
+        """Queue one (N,) frame on ``stream_id``'s streaming lane.
+
+        Frames of the same stream are answered in submission order by a
+        per-stream :class:`repro.stream.StreamingFilter` (delta filtering
+        with cached state), so a slowly varying stream pays boundary-of-
+        change work per frame instead of a full refilter. Auto-flushes
+        when ``panel_width`` frames are pending; returns the flushed
+        :class:`FrameResult` list (submission order) or None.
+        """
+        self._pending_frames.append((stream_id, np.asarray(frame)))
+        if len(self._pending_frames) >= self.panel_width:
+            return self.flush_frames()
+        return None
+
+    def flush_frames(self) -> list[FrameResult] | None:
+        """Answer all pending frames now, in submission order.
+
+        Per-frame latency and halo-words accounting accumulate on the
+        engine (``frames_served``, ``stream_words``,
+        ``stream_latency_s``) — the serving lane's observability hook.
+        """
+        if not self._pending_frames:
+            return None
+        results: list[FrameResult] = []
+        for stream_id, frame in self._pending_frames:
+            lane = self._streams.get(stream_id)
+            if lane is None:
+                lane = StreamingFilter(
+                    self.filt,
+                    backend=self.backend,
+                    opts=self.opts,
+                    **self.stream_opts,
+                )
+                self._streams[stream_id] = lane
+            res = lane.push(frame)
+            results.append(res)
+            self.frames_served += 1
+            self.stream_words += res.words
+            self.stream_latency_s += res.latency_s
+        self._pending_frames.clear()
+        return results
 
     def _pack(self, pending: list[np.ndarray]) -> tuple[np.ndarray, int]:
         """Stack pending (N,) requests into a fixed-width (N, F) panel."""

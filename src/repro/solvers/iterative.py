@@ -74,6 +74,7 @@ def _lasso_result(problem, state_a, hist, k, conv, method, backend, opts):
 def ista(
     problem: LassoProblem,
     *,
+    a0: jax.Array | None = None,
     n_iters: int = 50,
     tol: float | None = None,
     backend: str = "dense",
@@ -81,14 +82,18 @@ def ista(
 ) -> SolveResult:
     """Iterative soft thresholding (paper eq. 21).
 
-    ``a <- S_{mu tau}(a + tau Phi~ (y - Phi~* a))``, warm-started at
-    ``a0 = Phi~ y`` (the paper stores the first forward transform "for
-    future iterations"). History records the objective of each incoming
-    iterate (computed from the residual the update needs anyway — no extra
-    filter calls); ``tol`` stops on its relative change.
+    ``a <- S_{mu tau}(a + tau Phi~ (y - Phi~* a))``, started at
+    ``a0 = Phi~ y`` by default (the paper stores the first forward
+    transform "for future iterations"). Pass ``a0=`` to warm-start from a
+    previous solution instead — the streaming lane seeds each frame with
+    the last frame's coefficients, cutting iterations-to-tolerance on
+    slowly varying scenes (DESIGN.md Sec. 8). History records the
+    objective of each incoming iterate (computed from the residual the
+    update needs anyway — no extra filter calls); ``tol`` stops on its
+    relative change.
     """
     y, tau, fwd, adj, soft, l1 = _lasso_setup(problem, backend, opts)
-    a0 = fwd(y)
+    a0 = fwd(y) if a0 is None else jnp.asarray(a0, y.dtype)
 
     def step(state):
         a, obj_prev = state
@@ -108,6 +113,7 @@ def ista(
 def fista(
     problem: LassoProblem,
     *,
+    a0: jax.Array | None = None,
     n_iters: int = 50,
     tol: float | None = None,
     backend: str = "dense",
@@ -121,9 +127,11 @@ def fista(
     iterations (and therefore far fewer network words). The proximal step
     is taken at the extrapolated point ``z``; history records the
     objective at ``z`` (free, from the residual the gradient needs).
+    ``a0=`` warm-starts from a previous solution (momentum restarts at
+    t=1, the safe choice for a shifted objective).
     """
     y, tau, fwd, adj, soft, l1 = _lasso_setup(problem, backend, opts)
-    a0 = fwd(y)
+    a0 = fwd(y) if a0 is None else jnp.asarray(a0, y.dtype)
 
     def step(state):
         a_prev, z, t, obj_prev = state
@@ -208,6 +216,7 @@ def wiener(
     y: jax.Array,
     noise_power: float,
     *,
+    x0: jax.Array | None = None,
     n_iters: int = 50,
     tol: float | None = 1e-6,
     backend: str = "dense",
@@ -224,11 +233,12 @@ def wiener(
     — one CG solve on the regularized Gram system plus one final ``gram``
     apply, i.e. nothing but Chebyshev recurrences on every backend.
     Returns the estimate in ``x`` and the latent ``(G + sigma^2)^{-1} y``
-    in ``aux``.
+    in ``aux``. ``x0=`` warm-starts the CG solve from a previous latent
+    (the streaming lane seeds each frame with the last frame's ``aux``).
     """
     res = conjugate_gradient(
         GramProblem(filt=filt, b=y, reg=float(noise_power)),
-        n_iters=n_iters, tol=tol, backend=backend, **opts)
+        x0=x0, n_iters=n_iters, tol=tol, backend=backend, **opts)
     xhat = filt.gram(res.x, backend=backend, **opts)
     return dataclasses.replace(res, x=xhat, aux=res.x, method="wiener")
 

@@ -1,0 +1,42 @@
+"""Streaming graph-signal subsystem (DESIGN.md Sec. 8).
+
+The paper's sensor networks collect signals *continuously*; this package is
+the serving lane that exploits it. Consecutive frames of a slowly varying
+scene differ on few vertices, and every shipped operation is linear in the
+signal, so work amortizes across frames instead of restarting from
+scratch:
+
+* :class:`StreamingFilter` — carries ``(last input, last output)`` across
+  frames and filters only the *delta* when few vertices changed: the
+  degree-M Chebyshev recurrence of a sparsely supported delta touches only
+  the M-hop neighbourhood of the changed set, so flops and halo words per
+  frame scale with the boundary of change, not N.
+* :class:`StreamingLasso` / :class:`StreamingWiener` (and the
+  :func:`stream_ista` / :func:`stream_fista` / :func:`stream_wiener`
+  conveniences) — warm-started iterative solvers: each frame's solve is
+  seeded with the previous frame's solution, cutting
+  iterations-to-tolerance (hence network words) on slowly varying scenes.
+
+``repro.serve.GraphFilterEngine`` exposes both as a streaming lane
+(``submit_frame`` / ``flush_frames``) with per-frame latency and
+words-exchanged accounting.
+"""
+
+from repro.stream.api import FrameResult, StreamingFilter
+from repro.stream.solvers import (
+    StreamingLasso,
+    StreamingWiener,
+    stream_fista,
+    stream_ista,
+    stream_wiener,
+)
+
+__all__ = [
+    "FrameResult",
+    "StreamingFilter",
+    "StreamingLasso",
+    "StreamingWiener",
+    "stream_fista",
+    "stream_ista",
+    "stream_wiener",
+]

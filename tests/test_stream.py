@@ -1,0 +1,389 @@
+"""Streaming-layer tests (``repro.stream``): K-hop masks, sparse-input
+apply parity, delta-filter parity vs full re-filter across backends, the
+delta-support words model, warm-start acceptance, and the engine
+streaming lane's ordering under interleaved submit/flush."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import graph, multipliers
+from repro.core.distributed import build_partition_plan
+from repro.filters import GraphFilter, backend_supports_sparse
+from repro.serve.engine import GraphFilterEngine
+from repro.solvers import GramProblem, LassoProblem, conjugate_gradient, fista, ista
+from repro.stream import (
+    StreamingFilter,
+    StreamingLasso,
+    StreamingWiener,
+    stream_fista,
+    stream_ista,
+    stream_wiener,
+)
+
+SIDE = 32  # grid scenes: diameter 2*(SIDE-1) >> order, so deltas stay local
+ORDER = 8
+
+
+@pytest.fixture(scope="module")
+def grid_setting():
+    """32x32 grid + Tikhonov/heat union filter (delta path engages)."""
+    g = graph.grid_graph(SIDE)
+    filt = GraphFilter.from_multipliers(
+        [multipliers.tikhonov(1.0, 1), multipliers.heat(0.5)],
+        order=ORDER, graph=g, lmax=8.0)
+    f0 = np.asarray(
+        g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2, np.float32)
+    return g, filt, f0
+
+
+@pytest.fixture(scope="module")
+def sensor_setting():
+    """96-node sensor graph + SGWT filter (solver warm-start tests)."""
+    g = graph.connected_sensor_graph(
+        jax.random.PRNGKey(1), n=96, sigma=0.17, kappa=0.18)
+    lmax = float(g.lmax_bound())
+    f0 = np.asarray(g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2 - 1.0,
+                    np.float32)
+    rng = np.random.default_rng(2)
+    y0 = f0 + 0.3 * rng.normal(size=g.n_vertices).astype(np.float32)
+    y1 = y0.copy()
+    ch = rng.choice(g.n_vertices, size=5, replace=False)
+    y1[ch] += 0.1 * rng.normal(size=5).astype(np.float32)
+    filt = GraphFilter.from_multipliers(
+        multipliers.sgwt_filter_bank(lmax, n_scales=3), 16,
+        graph=g, lmax=lmax)
+    return g, filt, y0, y1
+
+
+def _patch_frame(f0, r0, c0, patch=3, bump=0.5):
+    y = f0.copy()
+    rr, cc = np.meshgrid(np.arange(r0, r0 + patch),
+                         np.arange(c0, c0 + patch), indexing="ij")
+    y[(rr * SIDE + cc).ravel()] += bump
+    return y
+
+
+# ------------------------------------------------------ K-hop masks ----
+
+
+def test_khop_neighborhood_path_graph():
+    """On a path graph the k-hop ball is an interval of radius k."""
+    n = 12
+    a = np.zeros((n, n))
+    idx = np.arange(n - 1)
+    a[idx, idx + 1] = a[idx + 1, idx] = 1.0
+    s = np.zeros(n, bool)
+    s[5] = True
+    for k in range(4):
+        want = np.zeros(n, bool)
+        want[5 - k : 5 + k + 1] = True
+        got = graph.khop_neighborhood(a, s, k)
+        np.testing.assert_array_equal(got, want)
+    # index-array support spelling agrees with the mask spelling
+    np.testing.assert_array_equal(
+        graph.khop_neighborhood(a, np.array([5]), 2),
+        graph.khop_neighborhood(a, s, 2))
+
+
+def test_khop_matches_polynomial_support(grid_setting):
+    """N_k(S) == support of L^k applied to an S-supported signal."""
+    g, _, _ = grid_setting
+    lap = np.asarray(g.laplacian(), np.float64)
+    n = g.n_vertices
+    s = np.zeros(n, bool)
+    s[[5 * SIDE + 7, 20 * SIDE + 25]] = True
+    v = s.astype(np.float64)
+    for k in range(4):
+        got = graph.khop_neighborhood(g.adjacency, s, k)
+        want = np.linalg.matrix_power(lap, k) @ v != 0.0
+        # polynomial support can only be smaller (cancellation), never larger
+        assert not np.any(want & ~got)
+        # device-array and host-array adjacency spellings agree
+        np.testing.assert_array_equal(
+            got, graph.khop_neighborhood(np.asarray(g.adjacency), s, k))
+
+
+# ---------------------------------------------------- sparse apply -----
+
+
+def test_sparse_capability_flags():
+    assert backend_supports_sparse("dense")
+    assert not backend_supports_sparse("matvec")
+    assert not backend_supports_sparse("bsr")
+
+
+def test_apply_sparse_matches_full_apply(grid_setting):
+    """Restricted-support apply == full apply of the same delta (1e-5)."""
+    g, filt, _ = grid_setting
+    rng = np.random.default_rng(0)
+    delta = np.zeros(g.n_vertices, np.float32)
+    s = rng.choice(g.n_vertices, size=9, replace=False)
+    delta[s] = rng.normal(size=9).astype(np.float32)
+    got = np.asarray(filt.apply_sparse(jnp.asarray(delta), delta != 0.0))
+    want = np.asarray(filt.apply(jnp.asarray(delta), backend="dense"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    # batched (N, F) deltas restrict the same way
+    d2 = np.stack([delta, 2.0 * delta], axis=1)
+    got2 = np.asarray(filt.apply_sparse(jnp.asarray(d2), delta != 0.0))
+    want2 = np.asarray(filt.apply(jnp.asarray(d2), backend="dense"))
+    np.testing.assert_allclose(got2, want2, atol=1e-5)
+
+
+def test_apply_sparse_fallback_backend(grid_setting):
+    """A backend without the capability still answers correctly."""
+    g, filt, _ = grid_setting
+    delta = np.zeros(g.n_vertices, np.float32)
+    delta[100] = 1.0
+    got = np.asarray(
+        filt.apply_sparse(jnp.asarray(delta), delta != 0.0, backend="bsr"))
+    want = np.asarray(filt.apply(jnp.asarray(delta), backend="dense"))
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ------------------------------------------------- delta filtering -----
+
+
+@pytest.mark.parametrize("backend", ["dense", "bsr"])
+def test_streaming_parity_vs_full_refilter(grid_setting, backend):
+    """Acceptance: every streamed frame's output == the full re-filter of
+    that frame to 1e-5, on the sparse-input backend and on a fallback
+    backend alike."""
+    g, filt, f0 = grid_setting
+    lane = StreamingFilter(filt, backend=backend)
+    frames = [f0] + [
+        _patch_frame(f0, 4 + 5 * t, 6 + 4 * t) for t in range(3)]
+    for y in frames:
+        res = lane.push(y)
+        want = np.asarray(filt.apply(jnp.asarray(y), backend=backend))
+        np.testing.assert_allclose(res.out, want, atol=1e-5)
+    if backend == "dense":
+        assert lane.delta_frames == len(frames) - 1
+        assert lane.full_refilters == 1
+
+
+def test_streaming_modes_and_thresholds(grid_setting):
+    g, filt, f0 = grid_setting
+    lane = StreamingFilter(filt, backend="dense", max_delta_frac=0.05)
+    r0 = lane.push(f0)
+    assert r0.mode == "full" and r0.changed == g.n_vertices
+    # identical frame: served from cache, nothing filtered
+    r1 = lane.push(f0)
+    assert r1.mode == "cached" and r1.words == 0 and r1.active == 0
+    np.testing.assert_array_equal(r1.out, r0.out)
+    # small patch: delta path, active = M-hop reach of the change
+    y = _patch_frame(f0, 10, 10)
+    r2 = lane.push(y)
+    assert r2.mode == "delta" and r2.changed == 9
+    assert r2.changed < r2.active < g.n_vertices
+    # above the threshold: full refilter
+    y2 = y + np.linspace(0, 1, g.n_vertices).astype(np.float32)
+    r3 = lane.push(y2)
+    assert r3.mode == "full"
+
+
+def test_streaming_refresh_every_forces_full(grid_setting):
+    g, filt, f0 = grid_setting
+    lane = StreamingFilter(filt, backend="dense", refresh_every=2)
+    frames = [f0] + [_patch_frame(f0, 4 + t, 4 + t) for t in range(3)]
+    modes = [lane.push(y).mode for y in frames]
+    assert modes == ["full", "delta", "full", "delta"]
+
+
+def test_streaming_shape_change_resets(grid_setting):
+    """A panel-width change cannot silently reuse stale cached state."""
+    g, filt, f0 = grid_setting
+    lane = StreamingFilter(filt, backend="dense")
+    lane.push(f0)
+    panel = np.stack([f0, f0 + 1.0], axis=1)
+    res = lane.push(panel)
+    assert res.mode == "full"
+    want = np.asarray(filt.apply(jnp.asarray(panel), backend="dense"))
+    np.testing.assert_allclose(res.out, want, atol=1e-5)
+
+
+# ------------------------------------------------- words accounting ----
+
+
+def test_vertex_send_counts_sum_is_halo_words(grid_setting):
+    g, _, _ = grid_setting
+    plan = build_partition_plan(g.adjacency, g.coords, 4)
+    counts = plan.vertex_send_counts(g.adjacency)
+    assert int(counts.sum()) == plan.halo_words
+
+
+def test_delta_words_full_support_matches_dense_model(grid_setting):
+    g, _, _ = grid_setting
+    plan = build_partition_plan(g.adjacency, g.coords, 4)
+    full = np.ones(g.n_vertices, bool)
+    assert plan.delta_halo_words(g.adjacency, full, ORDER) == \
+        ORDER * plan.halo_words
+
+
+def test_delta_words_scale_with_boundary_of_change(grid_setting):
+    """Acceptance: at <= 10% changed vertices the delta path exchanges
+    strictly fewer words per frame than a full refilter, and the streaming
+    lane's inline accounting agrees with the PartitionPlan model."""
+    g, filt, f0 = grid_setting
+    lane = StreamingFilter(filt, backend="dense", n_parts=4)
+    plan = lane._plan
+    full_words = ORDER * plan.halo_words
+    lane.push(f0)
+    y = _patch_frame(f0, 12, 12, patch=5)  # 25 of 1024 vertices ~ 2.4%
+    res = lane.push(y)
+    assert res.mode == "delta"
+    assert 0 < res.words < full_words
+    changed = np.zeros(g.n_vertices, bool)
+    changed[np.nonzero(y != f0)[0]] = True
+    assert res.words == plan.delta_halo_words(g.adjacency, changed, ORDER)
+    # growing the changed set can only grow the words
+    lane.reset()
+    lane.push(f0)
+    res2 = lane.push(_patch_frame(f0, 10, 10, patch=10))
+    assert res2.mode == "delta" and res2.words >= res.words
+
+
+def test_streaming_filter_without_plan_reports_zero_words(grid_setting):
+    g, filt, f0 = grid_setting
+    lane = StreamingFilter(filt, backend="dense")
+    assert lane.push(f0).words == 0
+    assert lane.push(_patch_frame(f0, 3, 3)).words == 0
+
+
+# ------------------------------------------------------ warm starts ----
+
+
+def test_warm_start_ista_fewer_iterations(sensor_setting):
+    """Acceptance: seeded with frame 0's solution, the frame 1 solve
+    crosses the cold run's final objective in <= budget/4 iterations."""
+    g, filt, y0, y1 = sensor_setting
+    budget = 120
+    p0 = LassoProblem(filt=filt, y=jnp.asarray(y0), mu=2.0)
+    p1 = LassoProblem(filt=filt, y=jnp.asarray(y1), mu=2.0)
+    cold0 = ista(p0, n_iters=budget)
+    cold1 = ista(p1, n_iters=budget)
+    warm1 = ista(p1, a0=cold0.aux, n_iters=budget)
+    target = float(cold1.history[-1]) * (1.0 + 1e-6)
+    hit = np.nonzero(warm1.history <= target)[0]
+    assert hit.size, "warm start never reached the cold objective"
+    assert int(hit[0]) <= budget // 4
+    # and the warm final solution is at least as good
+    assert p1.objective(warm1.aux) <= p1.objective(cold1.aux) * (1 + 1e-4)
+
+
+def test_warm_start_fista_matches_cold_objective(sensor_setting):
+    g, filt, y0, y1 = sensor_setting
+    budget = 80
+    p0 = LassoProblem(filt=filt, y=jnp.asarray(y0), mu=2.0)
+    p1 = LassoProblem(filt=filt, y=jnp.asarray(y1), mu=2.0)
+    cold0 = fista(p0, n_iters=budget)
+    cold1 = fista(p1, n_iters=budget)
+    warm1 = fista(p1, a0=cold0.aux, n_iters=budget)
+    target = float(cold1.history[-1]) * (1.0 + 1e-6)
+    hit = np.nonzero(warm1.history <= target)[0]
+    assert hit.size and int(hit[0]) <= budget // 4
+
+
+def test_warm_start_cg_fewer_iterations(sensor_setting):
+    g, filt, y0, y1 = sensor_setting
+    prob0 = GramProblem(filt=filt, b=jnp.asarray(y0), reg=0.5)
+    prob1 = GramProblem(filt=filt, b=jnp.asarray(y1), reg=0.5)
+    r0 = conjugate_gradient(prob0, n_iters=200, tol=1e-7)
+    cold = conjugate_gradient(prob1, n_iters=200, tol=1e-7)
+    warm = conjugate_gradient(prob1, x0=r0.x, n_iters=200, tol=1e-7)
+    assert warm.converged and cold.converged
+    assert warm.iterations < cold.iterations
+    np.testing.assert_allclose(np.asarray(warm.x), np.asarray(cold.x),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_streaming_lasso_and_wiener_lanes(sensor_setting):
+    g, filt, y0, y1 = sensor_setting
+    lane = StreamingLasso(filt, mu=2.0, tol=1e-4, n_iters=150)
+    r0 = lane.push(y0)
+    r1 = lane.push(y1)
+    assert r1.iterations <= r0.iterations
+    p1 = LassoProblem(filt=filt, y=jnp.asarray(y1), mu=2.0)
+    cold1 = fista(p1, n_iters=150)
+    assert p1.objective(r1.aux) <= p1.objective(cold1.aux) * 1.10
+
+    heat = GraphFilter.from_multipliers(
+        [multipliers.heat(0.5)], 16, graph=g)
+    wlane = StreamingWiener(heat, 0.25, tol=1e-6, n_iters=200)
+    w0 = wlane.push(y0)
+    w1 = wlane.push(y1)
+    assert w0.converged and w1.converged
+    assert w1.iterations <= w0.iterations
+
+
+def test_stream_convenience_functions(sensor_setting):
+    g, filt, y0, y1 = sensor_setting
+    res_i = stream_ista(filt, [y0, y1], mu=2.0, tol=1e-4, n_iters=60)
+    res_f = stream_fista(filt, [y0, y1], mu=2.0, tol=1e-4, n_iters=60)
+    assert len(res_i) == len(res_f) == 2
+    assert {r.method for r in res_i} == {"ista"}
+    assert {r.method for r in res_f} == {"fista"}
+    heat = GraphFilter.from_multipliers(
+        [multipliers.heat(0.5)], 16, graph=g)
+    res_w = stream_wiener(heat, [y0, y1], 0.25, tol=1e-6, n_iters=200)
+    assert [r.method for r in res_w] == ["wiener", "wiener"]
+    assert res_w[1].iterations <= res_w[0].iterations
+
+
+def test_streaming_lasso_rejects_unknown_method(sensor_setting):
+    _, filt, _, _ = sensor_setting
+    with pytest.raises(ValueError, match="ista"):
+        StreamingLasso(filt, method="bogus")
+
+
+# ------------------------------------------------------ engine lane ----
+
+
+def test_engine_streaming_lane_ordering(grid_setting):
+    """Interleaved submit/flush across two streams: per-stream frame
+    order is submission order, outputs match standalone full applies,
+    and the engine's accounting adds up."""
+    g, filt, f0 = grid_setting
+    eng = GraphFilterEngine(filt, backend="dense", panel_width=3)
+    frames_a = [f0] + [_patch_frame(f0, 4 + t, 4) for t in range(2)]
+    frames_b = [2.0 * f0, _patch_frame(2.0 * f0, 8, 8)]
+
+    got = []
+    assert eng.submit_frame("a", frames_a[0]) is None
+    assert eng.submit_frame("b", frames_b[0]) is None
+    out = eng.submit_frame("a", frames_a[1])  # panel_width reached
+    assert out is not None and len(out) == 3
+    got.extend([("a", out[0]), ("b", out[1]), ("a", out[2])])
+    assert eng.flush_frames() is None  # nothing pending: drains empty
+    assert eng.submit_frame("b", frames_b[1]) is None
+    assert eng.submit_frame("a", frames_a[2]) is None
+    out = eng.flush_frames()
+    assert out is not None and len(out) == 2
+    got.extend([("b", out[0]), ("a", out[1])])
+
+    per_stream = {"a": [], "b": []}
+    for sid, res in got:
+        per_stream[sid].append(res)
+    assert [r.frame for r in per_stream["a"]] == [0, 1, 2]
+    assert [r.frame for r in per_stream["b"]] == [0, 1]
+    assert [r.mode for r in per_stream["a"]] == ["full", "delta", "delta"]
+    for frames, results in ((frames_a, per_stream["a"]),
+                            (frames_b, per_stream["b"])):
+        for y, res in zip(frames, results):
+            want = np.asarray(filt.apply(jnp.asarray(y), backend="dense"))
+            np.testing.assert_allclose(res.out, want, atol=1e-5)
+    assert eng.frames_served == 5
+    assert eng.stream_latency_s > 0.0
+
+
+def test_engine_streaming_lane_isolated_from_other_lanes(grid_setting):
+    """submit() panels and submit_frame() streams do not interfere."""
+    g, filt, f0 = grid_setting
+    eng = GraphFilterEngine(filt, backend="dense", panel_width=2)
+    assert eng.submit_frame("s", f0) is None
+    reqs = [eng.submit(f0), eng.submit(2.0 * f0)]
+    assert reqs[0] is None and reqs[1] is not None
+    out = eng.flush_frames()
+    assert len(out) == 1 and out[0].mode == "full"
+    assert eng.served == 2 and eng.frames_served == 1

@@ -1,0 +1,208 @@
+"""CI perf-regression gate over the BENCH_<tag>.json trajectory records.
+
+Runs the quick benchmark suite (``python -m benchmarks.run --tag <tag>``),
+then diffs the fresh record against the committed baseline — by default
+the latest committed ``BENCH_<tag>.json`` in the repo root (highest
+``prN`` tag; scratch tags ``local``/``ci`` and the fresh tag itself are
+never baselines), so the gate tracks the trajectory without edits; pin a
+specific record with ``--baseline``. Every *key row* — a (table, op) pair
+whose baseline ``median_ms`` is at least ``--min-ms`` (timing rows only;
+sub-floor rows are noise at CI-runner resolution) — must come in under
+``--threshold`` times its baseline, and must still exist. Rows over the
+threshold on the first pass are re-measured up to ``--retries`` times
+(rerunning just their table via ``--only`` and keeping the fastest
+observation) before being declared regressions: several rows time a
+single un-warmed call, and one descheduled moment on a shared runner
+must not fail the build. Exit status is nonzero on any surviving
+regression or lost row, so the workflow job fails and the fresh JSON is
+still uploaded as an artifact for inspection.
+
+The baseline is only meaningful on hardware comparable to where it was
+recorded: a constant dev-machine/CI-runner speed offset shifts *every*
+ratio, which retries cannot fix. If the gate's first run on new
+infrastructure fails uniformly across rows, rebaseline deliberately —
+download the uploaded ``BENCH_ci.json`` artifact from that run, commit
+it as the next ``BENCH_prN.json``, and subsequent runs diff against
+numbers produced where they are measured.
+
+Usage:
+    PYTHONPATH=src python tools/bench_check.py --tag ci
+    python tools/bench_check.py --tag ci --skip-run   # compare existing
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+SCRATCH_TAGS = {"local", "ci"}
+
+
+def latest_baseline(exclude_tag: str) -> Path | None:
+    """The committed perf record with the highest ``prN`` tag.
+
+    Non-``prN`` tags sort before every ``prN`` (a named rebaseline still
+    beats nothing), scratch tags and the fresh tag are skipped.
+    """
+
+    def rank(path: Path) -> int:
+        m = re.fullmatch(r"BENCH_pr(\d+)\.json", path.name)
+        return int(m.group(1)) if m else -1
+
+    candidates = [
+        p
+        for p in REPO.glob("BENCH_*.json")
+        if p.name[len("BENCH_") : -len(".json")] not in SCRATCH_TAGS | {exclude_tag}
+    ]
+    return max(candidates, key=rank) if candidates else None
+
+
+def load_rows(path: Path) -> dict[tuple[str, str], dict]:
+    record = json.loads(path.read_text())
+    return {(r["table"], r["op"]): r for r in record["rows"]}
+
+
+def _bench_env() -> dict[str, str]:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src") + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def run_suite(tag: str) -> None:
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--tag", tag],
+        cwd=REPO,
+        env=_bench_env(),
+        check=True,
+    )
+
+
+def remeasure(table: str, op: str) -> float | None:
+    """Re-run one table via ``--only`` and return ``op``'s fresh ms.
+
+    ``--only`` runs never write a BENCH record, so this is a pure
+    re-observation; the caller keeps the minimum over attempts.
+    """
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.run", "--only", table],
+        cwd=REPO,
+        env=_bench_env(),
+        capture_output=True,
+        text=True,
+        check=True,
+    )
+    for line in proc.stdout.splitlines():
+        if line.startswith(op + ","):
+            return float(line.split(",")[1]) / 1e3
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--baseline",
+        default=None,
+        help="committed baseline record (default: latest committed BENCH_prN.json)",
+    )
+    ap.add_argument("--tag", default="ci", help="tag for the fresh BENCH_<tag>.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.5,
+        help="fail when fresh median_ms exceeds threshold x baseline",
+    )
+    ap.add_argument(
+        "--min-ms",
+        type=float,
+        default=5.0,
+        help="baseline rows faster than this are noise, not gated",
+    )
+    ap.add_argument(
+        "--retries",
+        type=int,
+        default=2,
+        help="re-measurements (best-of) granted to a row before it fails",
+    )
+    ap.add_argument(
+        "--skip-run",
+        action="store_true",
+        help="compare an existing BENCH_<tag>.json instead of rerunning",
+    )
+    args = ap.parse_args()
+
+    if args.baseline is not None:
+        baseline_path = REPO / args.baseline
+    else:
+        baseline_path = latest_baseline(exclude_tag=args.tag)
+        if baseline_path is None:
+            print("FAIL: no committed BENCH_*.json baseline found", file=sys.stderr)
+            return 2
+    if not baseline_path.exists():
+        print(f"FAIL: baseline {baseline_path} not found", file=sys.stderr)
+        return 2
+    print(f"baseline: {baseline_path.name}")
+    if not args.skip_run:
+        run_suite(args.tag)
+    fresh_path = REPO / f"BENCH_{args.tag}.json"
+    if not fresh_path.exists():
+        print(f"FAIL: fresh record {fresh_path} not found", file=sys.stderr)
+        return 2
+
+    baseline = load_rows(baseline_path)
+    fresh = load_rows(fresh_path)
+    key_rows = {k: r for k, r in baseline.items() if r["median_ms"] >= args.min_ms}
+    print(
+        f"perf gate: {len(key_rows)} key rows (baseline >= {args.min_ms} ms) "
+        f"of {len(baseline)} baseline rows; threshold {args.threshold:.2f}x"
+    )
+
+    failures: list[str] = []
+    for key, base_row in sorted(key_rows.items()):
+        table, op = key
+        fresh_row = fresh.get(key)
+        if fresh_row is None:
+            failures.append(f"{table}/{op}: row disappeared from the fresh record")
+            continue
+        base_ms = base_row["median_ms"]
+        fresh_ms = fresh_row["median_ms"]
+        attempts = 0
+        while fresh_ms / base_ms > args.threshold and attempts < args.retries:
+            attempts += 1
+            print(f"  [retry {attempts}/{args.retries}] {op} at {fresh_ms / base_ms:.2f}x ...")
+            again = remeasure(table, op)
+            if again is not None:
+                fresh_ms = min(fresh_ms, again)
+        ratio = fresh_ms / base_ms
+        verdict = "OK" if ratio <= args.threshold else "REGRESSION"
+        note = f" (best of {attempts + 1})" if attempts else ""
+        print(
+            f"  [{verdict:10s}] {op}: {base_ms:9.3f} ms -> {fresh_ms:9.3f} ms "
+            f"({ratio:.2f}x){note}"
+        )
+        if ratio > args.threshold:
+            failures.append(
+                f"{table}/{op}: {base_ms:.3f} ms -> {fresh_ms:.3f} ms "
+                f"({ratio:.2f}x > {args.threshold:.2f}x)"
+            )
+
+    new_rows = sorted(set(fresh) - set(baseline))
+    if new_rows:
+        print(f"  ({len(new_rows)} new rows not in baseline — informational)")
+
+    if failures:
+        print(f"\nFAIL: {len(failures)} perf regression(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,14 +1,23 @@
 #!/usr/bin/env bash
-# CI entry point: install dev deps, lint, run the tier-1 suite on CPU,
-# and smoke-run the quickstart example so example drift is caught.
+# CI entry point: install dev deps, lint, run the test suite on CPU, and
+# smoke-run the quickstart example so example drift is caught.
 #
 # All Pallas paths run with interpret=True off-TPU (the backends choose it
 # automatically), so the whole matrix — including the fused union-combine
 # kernel and the multi-device subprocess tests (forced host devices) — is
 # exercised on a plain CPU runner. Collection errors fail the run
 # (pytest exits non-zero on them; --co smoke-checks first for clarity).
+#
+# Lanes (CI_LANE env var, default "fast"):
+#   fast — PR feedback: -m "not slow" (skips the 8-device subprocess
+#          parity tests, ~minutes saved per run).
+#   full — main pushes: everything, with per-test timeouts (pytest-timeout,
+#          installed from requirements-dev) so one hung subprocess cannot
+#          eat the whole job budget.
 set -euo pipefail
 cd "$(dirname "$0")/.."
+
+LANE="${CI_LANE:-fast}"
 
 # Purge stray __pycache__ noise from the working tree before anything can
 # import it (stale bytecode has shadowed real modules before).
@@ -16,19 +25,43 @@ find . -name __pycache__ -prune -exec rm -rf {} +
 
 python -m pip install -r requirements-dev.txt
 
-# Lint (ruff ships in requirements-dev; gate so minimal local environments
-# without it can still run the suite).
+# Lint. Mandatory on CI (requirements-dev installs ruff there); local
+# minimal environments without ruff may still run the tests.
+#
+# `ruff format --check` is a ratchet: it covers the paths below (new
+# subsystems land formatted); extend FORMAT_PATHS as older files get
+# reformatted rather than formatting the whole tree in one noise commit.
+FORMAT_PATHS=(src/repro/stream tools/bench_check.py)
 if python -m ruff --version >/dev/null 2>&1; then
   python -m ruff check .
+  python -m ruff format --check "${FORMAT_PATHS[@]}"
+elif [ -n "${CI:-}" ]; then
+  echo "ruff is required on CI but is not installed" >&2
+  exit 1
 else
-  echo "ruff unavailable; skipping lint" >&2
+  echo "ruff unavailable; skipping lint (local run)" >&2
 fi
 
 # Fail fast and loudly on collection errors (the historical failure mode).
 python -m pytest --collect-only -q > /dev/null
 
-# Tier-1 (ROADMAP.md): full suite, quiet, stop on first failure.
-python -m pytest -x -q
+TIMEOUT_ARGS=()
+if python -c "import pytest_timeout" >/dev/null 2>&1; then
+  TIMEOUT_ARGS=(--timeout=900 --timeout-method=thread)
+fi
+
+case "$LANE" in
+  fast)
+    python -m pytest -x -q -m "not slow" "${TIMEOUT_ARGS[@]}"
+    ;;
+  full)
+    python -m pytest -x -q "${TIMEOUT_ARGS[@]}"
+    ;;
+  *)
+    echo "unknown CI_LANE=$LANE (use fast|full)" >&2
+    exit 2
+    ;;
+esac
 
 # Example-drift smoke: the README quickstart must keep running as written.
 PYTHONPATH=src python examples/quickstart.py
