@@ -19,6 +19,16 @@ Two interchangeable matvec backends:
 Both run under ``shard_map`` and compose with ``cheb_apply`` /
 ``UnionFilterOperator`` unchanged, because those only see a matvec closure.
 
+The halo backend additionally ships an **overlapped schedule**
+(:func:`halo_cheb_apply_overlapped`, the default): each partition's rows
+are split into a boundary block (rows with at least one off-partition
+column — the only vertices other devices ever need) and an interior block
+(rows whose columns are all owned locally). Step k computes the boundary
+rows of ``T_k`` first, immediately issues the ``all_to_all`` that step
+k+1 will consume, and only then computes the interior rows — so the
+exchange is in flight while the bulk of the matvec runs, instead of
+serializing exchange -> matvec every order (DESIGN.md Sec. 6.4).
+
 The partition plan is built on host (static graph topology — the paper's
 nodes likewise know their neighbours up front) and carried as sharded
 arrays: stacking the per-device tables over the leading (device) axis.
@@ -40,7 +50,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import graph as graph_lib
 
 __all__ = ["PartitionPlan", "build_partition_plan", "distributed_cheb_apply",
-           "halo_matvec", "allgather_matvec", "DistributedGraphContext"]
+           "halo_matvec", "halo_cheb_apply_overlapped", "allgather_matvec",
+           "DistributedGraphContext"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -63,6 +74,14 @@ class PartitionPlan:
         matvec across all devices — the paper's message-count analog.
       n_local: vertices per device (padded).
       n: true number of vertices.
+      n_boundary: uniform boundary-block size (clamped >= 1): within each
+        partition the local rows are ordered boundary-first, so rows
+        ``[0, boundary_counts[p])`` are exactly the rows with at least one
+        off-partition Laplacian column, and every ``send_idx`` entry lands
+        below ``n_boundary``. The overlapped schedule computes this block
+        first and issues its exchange before the interior matvec.
+      boundary_counts: (P,) true per-partition boundary-row counts
+        (``n_boundary`` is their max, padded uniform for shard_map).
     """
 
     order: np.ndarray
@@ -72,6 +91,8 @@ class PartitionPlan:
     halo_words: int
     n_local: int
     n: int
+    n_boundary: int = 1
+    boundary_counts: np.ndarray | None = None
 
     @property
     def n_parts(self) -> int:
@@ -146,6 +167,31 @@ def build_partition_plan(
     lp = np.diag(a.sum(axis=1)) - a
     lap[:n, :n] = lp[np.ix_(order, order)]
 
+    # Boundary-first local refinement: within each partition, stably move
+    # the rows with any off-partition column ahead of the interior rows.
+    # Sent vertices are always boundary rows (L is symmetric: if q's rows
+    # touch p's vertex v, then v's row touches q), so after this reorder
+    # every send_idx entry indexes into the leading boundary block — the
+    # overlapped schedule can exchange T_k as soon as that block is
+    # computed. Padding rows are all-zero (interior) and stay at the tail.
+    boundary_counts = np.zeros(n_parts, dtype=np.int64)
+    local_perm = np.empty(n_pad, dtype=np.int64)
+    for p in range(n_parts):
+        sl = slice(p * n_local, (p + 1) * n_local)
+        rows = lap[sl]
+        off_block = np.ones(n_pad, dtype=bool)
+        off_block[sl] = False
+        is_boundary = np.any(rows[:, off_block] != 0.0, axis=1)
+        boundary_counts[p] = int(is_boundary.sum())
+        local_perm[sl] = p * n_local + np.concatenate(
+            [np.nonzero(is_boundary)[0], np.nonzero(~is_boundary)[0]])
+    lap = lap[np.ix_(local_perm, local_perm)]
+    # Padding rows keep the global tail slots, so real vertices still
+    # occupy local_perm[:n] and the public `order` absorbs the refinement.
+    assert np.all(local_perm[:n] < n)
+    order = order[local_perm[:n]]
+    n_boundary = max(1, int(boundary_counts.max()))
+
     owner = np.repeat(np.arange(n_parts), n_local)
 
     # For each ordered pair (p, q != p): vertices of q that p's rows touch.
@@ -173,6 +219,8 @@ def build_partition_plan(
                 continue
             t = need[p][q]  # global ids owned by q, needed by p
             halo_words += len(t)
+            # Sent vertices must sit in q's boundary block (symmetry).
+            assert np.all(t - q * n_local < boundary_counts[q]), (p, q)
             # q sends these to p: record in q's send table, destination p.
             send_idx[q, p, : len(t)] = t - q * n_local
             # p's halo columns for data received from q sit at block q.
@@ -186,6 +234,8 @@ def build_partition_plan(
         halo_words=int(halo_words),
         n_local=n_local,
         n=n,
+        n_boundary=n_boundary,
+        boundary_counts=boundary_counts,
     )
 
 
@@ -204,6 +254,97 @@ def halo_matvec(x_local, l_own, l_halo, send_idx, axis_name: str):
             + jnp.tensordot(l_halo, halo, axes=1))
 
 
+def halo_cheb_apply_overlapped(
+    f_loc,
+    coeffs,
+    lmax,
+    l_own,
+    l_halo,
+    send_idx,
+    *,
+    n_boundary: int,
+    axis_name: str,
+):
+    """Overlapped distributed ``Phi~ f``. Runs inside shard_map.
+
+    Same recurrence and combine as ``chebyshev.cheb_apply`` over
+    ``halo_matvec``, but restructured so communication hides behind
+    computation: the plan orders each partition's rows boundary-first
+    (``n_boundary`` rows with off-partition columns, everything a peer
+    ever reads), so step k can
+
+    1. compute only the boundary rows of ``T_k`` (they need just the full
+       ``T_{k-1}`` and its halo, both on hand from step k-1),
+    2. immediately issue the ``all_to_all`` producing the halo that step
+       k+1 consumes,
+    3. compute the interior rows of ``T_k`` while that exchange is in
+       flight.
+
+    The final step is peeled with no exchange (``T_M``'s halo is never
+    consumed), so exactly M exchanges run per apply — the words model
+    ``messages_per_apply = M * halo_words`` is unchanged.
+
+    Args:
+      f_loc: (n_local, ...) this device's signal slice.
+      coeffs: (eta, M+1) union coefficients; lmax: spectrum bound.
+      l_own/l_halo/send_idx: this device's plan tables (no leading P axis).
+      n_boundary: uniform boundary-block size from the plan (static).
+
+    Returns: (eta,) + f_loc.shape combined outputs, matching
+    ``chebyshev.cheb_apply``.
+    """
+    from repro.core.chebyshev import _outer  # local import to avoid cycle
+
+    b = n_boundary
+    coeffs = jnp.asarray(coeffs, dtype=f_loc.dtype)
+    alpha = jnp.asarray(lmax, dtype=f_loc.dtype) / 2.0
+    order = coeffs.shape[1] - 1
+
+    def exchange(t_boundary):
+        """Issue the all_to_all for one Krylov vector's boundary block."""
+        send_buf = t_boundary[send_idx]  # send_idx < n_boundary always
+        recv = jax.lax.all_to_all(send_buf, axis_name, 0, 0, tiled=False)
+        return recv.reshape((-1,) + t_boundary.shape[1:])
+
+    def step_rows(rows, t1, t0, halo1, first):
+        """Rows ``rows`` of T_k from full T_{k-1}, T_{k-2} and T_{k-1}'s
+        halo — the same shifted recurrence as ``chebyshev.cheb_apply``."""
+        lx = (jnp.tensordot(l_own[rows], t1, axes=1)
+              + jnp.tensordot(l_halo[rows], halo1, axes=1))
+        if first:
+            return (lx - alpha * t1[rows]) / alpha
+        return (2.0 / alpha) * (lx - alpha * t1[rows]) - t0[rows]
+
+    def overlapped_step(t1, t0, halo1, first, with_exchange):
+        """Boundary rows -> issue exchange -> interior rows."""
+        tk_b = step_rows(slice(0, b), t1, t0, halo1, first)
+        halo_k = exchange(tk_b) if with_exchange else None
+        tk_i = step_rows(slice(b, None), t1, t0, halo1, first)
+        return jnp.concatenate([tk_b, tk_i], axis=0), halo_k
+
+    t0 = f_loc
+    halo0 = exchange(t0[:b])  # T0's boundary values for step 1
+    t1, halo1 = overlapped_step(
+        t0, t0, halo0, first=True, with_exchange=order >= 2)
+    acc = _outer(0.5 * coeffs[:, 0], t0) + _outer(coeffs[:, 1], t1)
+    if order < 2:
+        return acc
+
+    def body(carry, c_k):
+        t1, t0, halo1, acc = carry
+        tk, halo_k = overlapped_step(
+            t1, t0, halo1, first=False, with_exchange=True)
+        acc = acc + _outer(c_k, tk)
+        return (tk, t1, halo_k, acc), None
+
+    (t1, t0, halo1, acc), _ = jax.lax.scan(
+        body, (t1, t0, halo1, acc),
+        jnp.swapaxes(coeffs[:, 2:order], 0, 1))
+    # Peeled last step: T_M feeds only the combine, never an exchange.
+    tk, _ = overlapped_step(t1, t0, halo1, first=False, with_exchange=False)
+    return acc + _outer(coeffs[:, order], tk)
+
+
 def allgather_matvec(x_local, l_rows, axis_name: str):
     """Naive baseline: all-gather the full signal, multiply own row-slab."""
     x_full = jax.lax.all_gather(x_local, axis_name, axis=0, tiled=True)
@@ -212,14 +353,32 @@ def allgather_matvec(x_local, l_rows, axis_name: str):
 
 @dataclasses.dataclass(frozen=True)
 class DistributedGraphContext:
-    """Binds a PartitionPlan to a mesh axis and exposes distributed ops."""
+    """Binds a PartitionPlan to a mesh axis and exposes distributed ops.
+
+    Compiled shard_map programs are cached per (backend, schedule) in
+    ``_programs`` — coefficients and ``lmax`` enter as runtime arguments,
+    so one traced program serves every filter order/eta combination
+    (apply and gram reuse the same cache entry) instead of re-tracing the
+    collective program on every call.
+    """
 
     plan: PartitionPlan
     mesh: Mesh
     axis: str
+    _programs: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     def _specs(self):
         return P(self.axis)
+
+    def _program(self, key, local_fn, in_specs, out_specs):
+        fn = self._programs.get(key)
+        if fn is None:
+            fn = jax.jit(shard_map(
+                local_fn, mesh=self.mesh,
+                in_specs=in_specs, out_specs=out_specs))
+            self._programs[key] = fn
+        return fn
 
     def scatter_signal(self, f) -> jax.Array:
         """Permute+pad a global (N, F) or (N,) signal and shard over devices.
@@ -239,7 +398,10 @@ class DistributedGraphContext:
         inv[self.plan.order] = np.arange(self.plan.n)
         return y[..., inv, :]
 
-    def cheb_apply(self, f_sharded, coeffs, lmax, backend: str = "halo"):
+    def cheb_apply(
+        self, f_sharded, coeffs, lmax, backend: str = "halo",
+        overlap: bool = True,
+    ):
         """Distributed ``Phi~ f`` (Algorithm 1 on the mesh).
 
         Prefer ``repro.filters.GraphFilter.apply(f, backend="halo")`` —
@@ -247,43 +409,58 @@ class DistributedGraphContext:
         is the underlying engine (and shim for pre-sharded callers).
 
         f_sharded: (P*n_local, F) sharded along ``axis``.
+        overlap: halo backend only — use the overlapped schedule
+          (:func:`halo_cheb_apply_overlapped`, default) or the serial
+          exchange->matvec reference (``overlap=False``); identical
+          results up to f32 rounding, same message count.
         Returns (eta, P*n_local, F) sharded along the vertex axis.
         """
         from repro.core import chebyshev  # local import to avoid cycle
 
         plan = self.plan
         coeffs = jnp.asarray(coeffs, f_sharded.dtype)
+        lmax = jnp.asarray(lmax, f_sharded.dtype)
         axis = self.axis
 
         if backend == "halo":
+            if overlap:
 
-            def local_fn(f_loc, l_own, l_halo, send_idx):
-                mv = lambda v: halo_matvec(
-                    v, l_own[0], l_halo[0], send_idx[0], axis)
-                return chebyshev.cheb_apply(mv, f_loc, coeffs, lmax)
+                def local_fn(f_loc, coeffs, lmax, l_own, l_halo, send_idx):
+                    return halo_cheb_apply_overlapped(
+                        f_loc, coeffs, lmax,
+                        l_own[0], l_halo[0], send_idx[0],
+                        n_boundary=plan.n_boundary, axis_name=axis)
 
-            fn = shard_map(
-                local_fn,
-                mesh=self.mesh,
-                in_specs=(P(axis), P(axis), P(axis), P(axis)),
-                out_specs=P(None, axis),
-            )
-            return fn(f_sharded, plan.l_own, plan.l_halo, plan.send_idx)
+            else:
+
+                def local_fn(f_loc, coeffs, lmax, l_own, l_halo, send_idx):
+                    mv = lambda v: halo_matvec(
+                        v, l_own[0], l_halo[0], send_idx[0], axis)
+                    return chebyshev.cheb_apply(mv, f_loc, coeffs, lmax)
+
+            fn = self._program(
+                ("halo", bool(overlap)), local_fn,
+                in_specs=(P(axis), P(None, None), P(),
+                          P(axis), P(axis), P(axis)),
+                out_specs=P(None, axis))
+            return fn(f_sharded, coeffs, lmax,
+                      plan.l_own, plan.l_halo, plan.send_idx)
 
         elif backend == "allgather":
-            l_rows = plan_row_slabs(plan)
+            l_rows = self._programs.get("l_rows")
+            if l_rows is None:
+                l_rows = plan_row_slabs(plan)
+                self._programs["l_rows"] = l_rows
 
-            def local_fn(f_loc, l_rows_loc):
+            def local_fn(f_loc, coeffs, lmax, l_rows_loc):
                 mv = lambda v: allgather_matvec(v, l_rows_loc[0], axis)
                 return chebyshev.cheb_apply(mv, f_loc, coeffs, lmax)
 
-            fn = shard_map(
-                local_fn,
-                mesh=self.mesh,
-                in_specs=(P(axis), P(axis)),
-                out_specs=P(None, axis),
-            )
-            return fn(f_sharded, l_rows)
+            fn = self._program(
+                "allgather", local_fn,
+                in_specs=(P(axis), P(None, None), P(), P(axis)),
+                out_specs=P(None, axis))
+            return fn(f_sharded, coeffs, lmax, l_rows)
         raise ValueError(f"unknown backend {backend!r}")
 
     def cheb_adjoint(self, a_sharded, coeffs, lmax):
@@ -295,25 +472,29 @@ class DistributedGraphContext:
 
         plan = self.plan
         coeffs = jnp.asarray(coeffs, a_sharded.dtype)
+        lmax = jnp.asarray(lmax, a_sharded.dtype)
         axis = self.axis
 
-        def local_fn(a_loc, l_own, l_halo, send_idx):
+        def local_fn(a_loc, coeffs, lmax, l_own, l_halo, send_idx):
             mv = lambda v: halo_matvec(
                 v, l_own[0], l_halo[0], send_idx[0], axis)
             return chebyshev.cheb_adjoint_apply(mv, a_loc, coeffs, lmax)
 
-        fn = shard_map(
-            local_fn, mesh=self.mesh,
-            in_specs=(P(None, self.axis), P(axis), P(axis), P(axis)),
+        fn = self._program(
+            "halo_adjoint", local_fn,
+            in_specs=(P(None, self.axis), P(None, None), P(),
+                      P(axis), P(axis), P(axis)),
             out_specs=P(axis))
-        return fn(a_sharded, plan.l_own, plan.l_halo, plan.send_idx)
+        return fn(a_sharded, coeffs, lmax,
+                  plan.l_own, plan.l_halo, plan.send_idx)
 
-    def gram_apply(self, f_sharded, op, backend: str = "halo"):
+    def gram_apply(self, f_sharded, op, backend: str = "halo",
+                   overlap: bool = True):
         """Distributed ``Phi~* Phi~ f`` as one degree-2M filter
         (Sec. IV-C, 4M|E| messages)."""
         out = self.cheb_apply(
             f_sharded, jnp.asarray(op.gram_coeffs)[None, :], op.lmax,
-            backend=backend)
+            backend=backend, overlap=overlap)
         return out[0]
 
     def messages_per_apply(self, order: int, backend: str = "halo") -> int:
@@ -517,10 +698,11 @@ def grid_cheb_apply_ca(
     acc = (0.5 * coeffs[:, 0, None, None, None] * t0[None]
            + coeffs[:, 1, None, None, None] * t1[None])
 
-    # remaining orders in blocks of `depth`
-    k = 2
-    while k <= order:
-        d = min(depth, order - k + 1)
+    # remaining orders in blocks of `depth`, overlapped: each block's
+    # ghost exchange is issued BEFORE the previous block's deferred
+    # eta-combine accumulations, so the 2 ppermutes per block hide
+    # behind the (eta x d) combine flops instead of serializing.
+    def exchange_block(t1, t0, d):
         # pack the T_{k-1} (depth d) and T_{k-2} (depth d-1, padded to d)
         # ghosts into ONE neighbour message per direction: the round count
         # per block is 2 ppermutes regardless of depth — the entire point
@@ -528,12 +710,19 @@ def grid_cheb_apply_ca(
         packed = jnp.stack([t1, t0], axis=0)  # (2, rows_per, side, F)
         top_halo = jax.lax.ppermute(packed[:, -d:], axis_names, fwd)
         bot_halo = jax.lax.ppermute(packed[:, :d], axis_names, bwd)
-        ext = jnp.concatenate([top_halo, packed, bot_halo], axis=1)
+        return jnp.concatenate([top_halo, packed, bot_halo], axis=1)
+
+    k = 2
+    if k <= order:
+        ext = exchange_block(t1, t0, min(depth, order - k + 1))
+    while k <= order:
+        d = min(depth, order - k + 1)
         t1e, t0e = ext[0], ext[1]
         gr_ext = jnp.concatenate([
             gr_base[:1] + jnp.arange(-d, 0),
             gr_base,
             gr_base[-1:] + jnp.arange(1, d + 1)])
+        interiors = []
         for j in range(d):
             t_new_ext = local_step(t1e, t0e, gr_ext)
             # shrink: t0 <- t1 (trimmed), t1 <- t_new
@@ -541,13 +730,19 @@ def grid_cheb_apply_ca(
             t1e = t_new_ext
             gr_ext = gr_ext[1:-1]
             trim = d - j - 1
-            interior = (t_new_ext[trim: t_new_ext.shape[0] - trim]
-                        if trim else t_new_ext)
-            acc = acc + coeffs[:, k + j, None, None, None] * interior[None]
+            interiors.append(t_new_ext[trim: t_new_ext.shape[0] - trim]
+                             if trim else t_new_ext)
         # after d steps both t1e and t0e are ghost-free (rows_per, ...)
         t0 = t0e
         t1 = t1e
+        k_block = k
         k += d
+        if k <= order:
+            # issue the next block's exchange first, combine while it flies
+            ext = exchange_block(t1, t0, min(depth, order - k + 1))
+        for j, interior in enumerate(interiors):
+            acc = acc + (coeffs[:, k_block + j, None, None, None]
+                         * interior[None])
 
     return acc.reshape(eta, rows_per * side, fdim)
 

@@ -196,9 +196,9 @@ class GraphFilter:
             ``dense``, ``bsr``, ``halo``, ``allgather``, ``grid`` and the
             graph-free ``matvec``.
         **opts
-            Backend options (e.g. ``block_size=`` for ``bsr``, ``mesh=`` /
-            ``axis=`` for distributed backends, ``matvec=`` for
-            ``matvec``).
+            Backend options (e.g. ``block_size=`` / ``krylov_dtype=`` for
+            ``bsr``, ``mesh=`` / ``axis=`` for distributed backends,
+            ``overlap=`` for ``halo``, ``matvec=`` for ``matvec``).
 
         Returns
         -------

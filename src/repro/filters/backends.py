@@ -221,7 +221,10 @@ class BsrBackend:
     stepwise kernel.
 
     Options: ``block_size`` (prepare; default 8), ``interpret`` (default:
-    auto — True off-TPU), ``f_tile`` / ``fuse`` overrides.
+    auto — True off-TPU), ``f_tile`` / ``fuse`` overrides, and
+    ``krylov_dtype`` (apply; default f32 — ``"bfloat16"`` halves the
+    kernels' Krylov working set while all combines stay f32, widening
+    the fused-kernel regime in ``autotune.select_tiling``).
     """
 
     name = "bsr"
@@ -262,16 +265,19 @@ class BsrBackend:
         interpret: bool | None = None,
         f_tile: int | None = None,
         fuse: bool | None = None,
+        krylov_dtype=None,
         **_,
     ):
         c = _coeffs_or(filt, coeffs)
         if interpret is None:
             interpret = jax.default_backend() != "tpu"
+        kd = jnp.dtype(krylov_dtype or jnp.float32).name
         fp, squeeze = self._forward(state, f)
         bell = state.bell
         tiling = autotune.select_tiling(
             state.n_pad, fp.shape[1], c.shape[0],
             bell.n_block_rows, bell.k_max, bell.block_size, fp.dtype,
+            krylov_dtype=kd,
         )
         if fuse is None:
             fuse = tiling.fuse
@@ -279,12 +285,12 @@ class BsrBackend:
         if fuse:
             out = kops.cheb_apply_bsr_fused(
                 bell.blocks, bell.cols, fp, c, filt.lmax,
-                interpret=interpret, f_tile=ft,
+                interpret=interpret, f_tile=ft, krylov_dtype=kd,
             )
         else:
             out = kops.cheb_apply_bsr(
                 bell.blocks, bell.cols, fp, jnp.asarray(c, fp.dtype),
-                filt.lmax, interpret=interpret, f_tile=ft,
+                filt.lmax, interpret=interpret, f_tile=ft, krylov_dtype=kd,
             )
         out = out[:, state.inv]
         return out[:, :, 0] if squeeze else out
@@ -344,12 +350,14 @@ class _ShardedBackendBase:
         )
         return DistributedGraphContext(plan=plan, mesh=mesh, axis=axis)
 
-    def apply(self, filt, ctx: DistributedGraphContext, f, *, coeffs=None, **_):
+    def apply(self, filt, ctx: DistributedGraphContext, f, *, coeffs=None,
+              overlap: bool = True, **_):
         c = _coeffs_or(filt, coeffs)
         f = jnp.asarray(f)
         squeeze = f.ndim == 1
         sharded = ctx.scatter_signal(f)
-        out = ctx.cheb_apply(sharded, c, filt.lmax, backend=self.name)
+        out = ctx.cheb_apply(sharded, c, filt.lmax, backend=self.name,
+                             overlap=overlap)
         out = jnp.asarray(ctx.gather_signal(np.asarray(out)))
         return out[:, :, 0] if squeeze else out
 
@@ -384,6 +392,12 @@ class HaloBackend(_ShardedBackendBase):
     recurrence order. Words per apply = ``M * halo_words <= 2 M |E|`` —
     never worse than the paper's radio bound (a boundary vertex is sent
     once per neighbouring partition, not once per edge).
+
+    By default the overlapped schedule runs (``overlap=True`` apply
+    option): each step computes its boundary rows first, issues the next
+    exchange, then computes the interior rows while the collective is in
+    flight. ``overlap=False`` selects the serial exchange->matvec
+    reference; both move exactly the same words.
     """
 
     name = "halo"

@@ -66,16 +66,21 @@ def union_vmem_bytes(
     k_max: int,
     block: int,
     dtype=jnp.float32,
+    *,
+    krylov_dtype=jnp.float32,
 ) -> int:
     """VMEM working set of the fused union kernel (bytes).
 
-    Counts the resident Laplacian tiles, the input tile, two f32 Krylov
-    buffers, the (eta, N, f_tile) f32 accumulators, and the output tile.
+    Counts the resident Laplacian tiles, the input tile, two Krylov
+    (ping/pong) buffers in ``krylov_dtype``, the (eta, N, f_tile) f32
+    accumulators, and the output tile. ``krylov_dtype="bfloat16"`` halves
+    the Krylov term, which is why the bf16 mode raises the fuse threshold
+    in :func:`select_tiling`.
     """
     itemsize = jnp.dtype(dtype).itemsize
     blocks_b = n_rows * k_max * block * block * itemsize
     sig_b = n * f_tile * itemsize  # input tile
-    krylov_b = 2 * n * f_tile * 4  # f32 ping/pong
+    krylov_b = 2 * n * f_tile * jnp.dtype(krylov_dtype).itemsize  # ping/pong
     acc_b = eta * n * f_tile * 4  # f32 accumulators
     out_b = eta * n * f_tile * itemsize
     return blocks_b + sig_b + krylov_b + acc_b + out_b
@@ -90,6 +95,8 @@ def select_tiling(
     block: int,
     dtype=jnp.float32,
     vmem_budget: int = VMEM_BUDGET_BYTES,
+    *,
+    krylov_dtype=jnp.float32,
 ) -> Tiling:
     """Pick ``(f_tile, fuse)`` for a Chebyshev union apply.
 
@@ -105,6 +112,9 @@ def select_tiling(
         Signal/Laplacian dtype.
     vmem_budget : int
         Bytes the fused working set may occupy.
+    krylov_dtype : jnp dtype
+        Krylov-buffer precision inside the fused kernel (bf16 halves
+        that term of the working set, admitting larger fused shapes).
 
     Returns
     -------
@@ -130,7 +140,8 @@ def select_tiling(
     best = None
     for cand in sorted({c for c in (f_tile, *candidates) if f % c == 0},
                        reverse=True):
-        bytes_ = union_vmem_bytes(n, cand, eta, n_rows, k_max, block, dtype)
+        bytes_ = union_vmem_bytes(n, cand, eta, n_rows, k_max, block, dtype,
+                                  krylov_dtype=krylov_dtype)
         if bytes_ <= vmem_budget:
             best = Tiling(f_tile=cand, fuse=True, vmem_bytes=bytes_)
             break
@@ -139,7 +150,8 @@ def select_tiling(
             f_tile=f_tile,
             fuse=False,
             vmem_bytes=union_vmem_bytes(
-                n, f_tile, eta, n_rows, k_max, block, dtype
+                n, f_tile, eta, n_rows, k_max, block, dtype,
+                krylov_dtype=krylov_dtype,
             ),
         )
     return best

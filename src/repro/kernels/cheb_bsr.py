@@ -62,7 +62,9 @@ def _cheb_step_kernel(
     # MXU contraction for this Laplacian tile; accumulate L @ t1 in f32
     # VMEM scratch (bf16 inputs still accumulate at full precision).
     acc_ref[...] += jnp.dot(
-        blocks_ref[0, 0], t1g_ref[...], preferred_element_type=jnp.float32
+        blocks_ref[0, 0].astype(jnp.float32),
+        t1g_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
     )
 
     @pl.when(j == k_max - 1)
@@ -161,8 +163,8 @@ def _cheb_union_kernel(
     blocks_ref,  # (n_rows, k_max, B, B) — the whole Block-ELL Laplacian
     f_ref,  # (N, FT)                     input signal tile (= T_0)
     out_ref,  # (eta, N, FT)              combined outputs, one per multiplier
-    ta_ref,  # (N, FT) f32 VMEM scratch — T_k ping buffer
-    tb_ref,  # (N, FT) f32 VMEM scratch — T_k pong buffer
+    ta_ref,  # (N, FT) VMEM scratch — T_k ping buffer (krylov_dtype)
+    tb_ref,  # (N, FT) VMEM scratch — T_k pong buffer (krylov_dtype)
     acc_ref,  # (eta, N, FT) f32 VMEM scratch — eq. 11 accumulators
     *,
     coeffs: tuple[tuple[float, ...], ...],
@@ -180,6 +182,14 @@ def _cheb_union_kernel(
     in-place pong write is safe: row ``i`` of ``T_{k-2}`` is consumed
     (aligned read) in the same loop iteration that overwrites it, and the
     gathered operand is always the *other* buffer (``T_{k-1}``).
+
+    Krylov precision: the ping/pong buffers carry ``krylov_dtype`` (the
+    pallas_call picks the scratch dtype); every step still computes in f32
+    and the accumulators pick up the *pre-rounding* f32 ``T_k`` — only the
+    value the next recurrence step reads back is rounded. With f32 buffers
+    every cast is a no-op, so the f32 path is bit-identical to the
+    pre-``krylov_dtype`` kernel; bf16 buffers halve the Krylov VMEM
+    footprint (see ``autotune.union_vmem_bytes``).
     """
     eta = len(coeffs)
     order = len(coeffs[0]) - 1
@@ -202,7 +212,7 @@ def _cheb_union_kernel(
         sl = pl.ds(i * block, block)
         t0 = f_ref[sl, :].astype(f32)
         t1 = spmv_row(f_ref, i) / alpha - t0
-        ta_ref[sl, :] = t1
+        ta_ref[sl, :] = t1.astype(ta_ref.dtype)
         for j in range(eta):
             acc_ref[j, sl, :] = coeffs[j][0] * 0.5 * t0 + coeffs[j][1] * t1
         return 0
@@ -217,10 +227,10 @@ def _cheb_union_kernel(
             lx = spmv_row(src1_ref, i)
             t_new = (
                 (2.0 / alpha) * lx
-                - 2.0 * src1_ref[sl, :]
-                - src0_ref[sl, :]
+                - 2.0 * src1_ref[sl, :].astype(f32)
+                - src0_ref[sl, :].astype(f32)
             )
-            dst_ref[sl, :] = t_new
+            dst_ref[sl, :] = t_new.astype(dst_ref.dtype)
             for j in range(eta):
                 acc_ref[j, sl, :] += coeffs[j][k] * t_new
             return 0
@@ -241,7 +251,7 @@ def _cheb_union_kernel(
 
 @functools.partial(
     jax.jit,
-    static_argnames=("coeffs", "lmax", "f_tile", "interpret"),
+    static_argnames=("coeffs", "lmax", "f_tile", "interpret", "krylov_dtype"),
 )
 def cheb_union_pallas(
     blocks: jax.Array,
@@ -252,6 +262,7 @@ def cheb_union_pallas(
     lmax: float,
     f_tile: int | None = None,
     interpret: bool = False,
+    krylov_dtype: str = "float32",
 ) -> jax.Array:
     """Full union apply ``Phi~ f`` in a single fused ``pallas_call``.
 
@@ -282,6 +293,12 @@ def cheb_union_pallas(
         F-dimension tile; defaults to ``min(F, 128)``.
     interpret : bool
         Run in Pallas interpret mode (CPU validation path).
+    krylov_dtype : str
+        Static dtype of the two VMEM Krylov (ping/pong) buffers —
+        ``"float32"`` (default, bit-identical to the historic kernel) or
+        ``"bfloat16"`` (halves the Krylov working set; the recurrence
+        still computes and accumulates in f32, only the stored ``T_k``
+        round-trips through bf16).
 
     Returns
     -------
@@ -298,6 +315,7 @@ def cheb_union_pallas(
     ft = f_tile or min(fdim, 128)
     assert fdim % ft == 0, (fdim, ft)
     alpha = lmax / 2.0
+    kdt = jnp.dtype(krylov_dtype)
 
     kernel = functools.partial(
         _cheb_union_kernel,
@@ -323,8 +341,8 @@ def cheb_union_pallas(
             ],
             out_specs=pl.BlockSpec((eta, n, ft), lambda fi, cols: (0, 0, fi)),
             scratch_shapes=[
-                pltpu.VMEM((n, ft), jnp.float32),
-                pltpu.VMEM((n, ft), jnp.float32),
+                pltpu.VMEM((n, ft), kdt),
+                pltpu.VMEM((n, ft), kdt),
                 pltpu.VMEM((eta, n, ft), jnp.float32),
             ],
         ),

@@ -40,6 +40,7 @@ def cheb_apply_bsr_fused(
     *,
     interpret: bool = False,
     f_tile: int | None = None,
+    krylov_dtype=None,
 ) -> jax.Array:
     """``Phi~ f`` via the fused union-combine kernel (one ``pallas_call``).
 
@@ -59,6 +60,10 @@ def cheb_apply_bsr_fused(
         Pallas interpret mode (CPU validation path).
     f_tile : int, optional
         F tile override; defaults to the autotune table's choice.
+    krylov_dtype : dtype-like, optional
+        Krylov (ping/pong) buffer precision inside the kernel; default
+        f32. ``"bfloat16"`` halves the Krylov VMEM working set while the
+        recurrence math and the eq. 11 accumulators stay f32.
 
     Returns
     -------
@@ -68,19 +73,22 @@ def cheb_apply_bsr_fused(
     ctup = tuple(
         tuple(float(x) for x in row) for row in np.atleast_2d(np.asarray(coeffs))
     )
+    kd = jnp.dtype(krylov_dtype or jnp.float32).name
     if f_tile is None:
         n_rows, k_max, b, _ = blocks.shape
         f_tile = select_tiling(
-            f.shape[0], f.shape[1], len(ctup), n_rows, k_max, b, f.dtype
+            f.shape[0], f.shape[1], len(ctup), n_rows, k_max, b, f.dtype,
+            krylov_dtype=kd,
         ).f_tile
     return cheb_union_pallas(
         blocks, cols, f,
         coeffs=ctup, lmax=float(lmax), f_tile=f_tile, interpret=interpret,
+        krylov_dtype=kd,
     )
 
 
 @functools.partial(
-    jax.jit, static_argnames=("lmax", "interpret", "f_tile")
+    jax.jit, static_argnames=("lmax", "interpret", "f_tile", "krylov_dtype")
 )
 def cheb_apply_bsr(
     blocks: jax.Array,
@@ -91,6 +99,7 @@ def cheb_apply_bsr(
     *,
     interpret: bool = False,
     f_tile: int | None = None,
+    krylov_dtype: str | None = None,
 ) -> jax.Array:
     """``Phi~ f`` with the stepwise Pallas chain (one call per order).
 
@@ -103,6 +112,11 @@ def cheb_apply_bsr(
       f: (N, F) signal batch (use F >= 8 for MXU efficiency on real TPUs).
       coeffs: (eta, M+1) Chebyshev coefficients.
       lmax: spectrum bound (static).
+      krylov_dtype: dtype the carried ``T_{k-1}``/``T_{k-2}`` buffers
+        round-trip through between steps (default: ``f.dtype``). With
+        ``"bfloat16"`` each step kernel still combines in f32 and the
+        eq. 11 accumulator stays in ``f.dtype``; only the stored Krylov
+        vectors are rounded — mirroring the fused kernel's mode.
 
     Returns: (eta, N, F).
     """
@@ -123,13 +137,16 @@ def cheb_apply_bsr(
     if coeffs.shape[1] <= 2:
         return acc
 
+    kd = jnp.dtype(krylov_dtype or f.dtype)
+
     def body(carry, c_k):
         t_prev1, t_prev2, acc = carry
         t_k = step(t_prev1, t_prev2)
-        acc = acc + c_k[:, None, None] * t_k[None]
+        acc = acc + c_k[:, None, None] * t_k.astype(acc.dtype)[None]
         return (t_k, t_prev1, acc), None
 
     (_, _, acc), _ = jax.lax.scan(
-        body, (t1, t0, acc), jnp.swapaxes(coeffs[:, 2:], 0, 1)
+        body, (t1.astype(kd), t0.astype(kd), acc),
+        jnp.swapaxes(coeffs[:, 2:], 0, 1),
     )
     return acc

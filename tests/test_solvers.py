@@ -13,7 +13,7 @@ import numpy as np
 import pytest
 
 from repro.apps import denoise_wiener, inverse_filter, wavelet_denoise_ista
-from repro.core import graph, multipliers
+from repro.core import graph, multipliers, operators
 from repro.filters import GraphFilter
 from repro.solvers import (
     GramProblem,
@@ -184,6 +184,42 @@ def test_cg_solves_regularized_gram_system(small_setting):
     np.testing.assert_allclose(np.asarray(res.x), want, rtol=1e-3,
                                atol=1e-3)
     assert res.converged
+
+
+POLY_BANK = [
+    lambda x: 0.3 + 0.1 * np.asarray(x, np.float64),
+    lambda x: 1.0 - 0.25 * np.asarray(x, np.float64)
+    + 0.05 * np.asarray(x, np.float64) ** 2,
+]
+
+
+@pytest.mark.parametrize("krylov_dtype,tol", [
+    # f32 Krylov: solver tolerance. bf16: CG converges to the solution of
+    # the *perturbed* system, so the error is ~ cond(A) x the documented
+    # per-apply bound (16 * 2^-8, DESIGN.md Sec. 6.3); reg = 10 keeps
+    # cond(A) ~ 6.5 so the apply bound itself is the right assertion
+    # (observed ~3.4e-2).
+    ("float32", 1e-3),
+    ("bfloat16", 16 * 2.0**-8),
+])
+def test_cg_gram_matches_eigh_oracle_bsr_krylov(small_setting,
+                                                krylov_dtype, tol):
+    """eigh-oracle parity sweep through the solver layer on the bsr
+    backend, covering the bf16 Krylov mode: polynomial multipliers of
+    degree <= order make the Chebyshev gram *exact*, so CG must land on
+    ``(sum_j Psi_j^2 + reg I)^{-1} b`` from the eigendecomposition."""
+    g, lmax, f0, y, filt = small_setting
+    poly = GraphFilter.from_multipliers(POLY_BANK, 8, graph=g, lmax=lmax)
+    reg = 10.0
+    mats = operators.exact_multiplier_matrix(
+        np.asarray(g.laplacian(), np.float64), POLY_BANK)
+    a_mat = sum(m @ m for m in mats) + reg * np.eye(g.n_vertices)
+    want = np.linalg.solve(a_mat, np.asarray(y, np.float64))
+    res = conjugate_gradient(
+        GramProblem(filt=poly, b=y, reg=reg), n_iters=300, tol=1e-9,
+        backend="bsr", krylov_dtype=krylov_dtype)
+    err = np.max(np.abs(np.asarray(res.x) - want)) / np.max(np.abs(want))
+    assert err < tol, (krylov_dtype, err)
 
 
 def test_cg_panel_solves_independent_columns(small_setting):
