@@ -1,0 +1,499 @@
+"""Open-loop load generator for the serving engines (DESIGN.md Sec. 9.4).
+
+Simulates 10^5--10^6 concurrent sensor streams against ONE engine:
+arrivals are a Poisson process at ``--rate`` requests/s over ``--seconds``
+of virtual time, each request drawn from a stream population with
+hot-spot skew (``hot_frac`` of the streams carry ``hot_mass`` of the
+traffic) and a mixed lane profile (applies / solves / frames). The trace
+is a deterministic function of ``--seed`` — numpy arrays precomputed up
+front — so two runs replay byte-identical workloads.
+
+Time is *virtual*: the driver advances a simulated clock along the
+arrival timeline and stamps completions on a single-server model
+(``start = max(arrival-side now, busy_until)``;
+``done = start + measured wall seconds of the panel``). Latency
+percentiles are therefore deterministic functions of (trace, measured
+panel costs) rather than of host scheduling jitter, and a million
+queued streams cost only their arrival records. Two workload shapes:
+
+* **burst** (``--burst``): every request arrives at t=0, so panels are
+  always full — measures peak *capacity* (served / busy seconds), the
+  throughput number ``tab_engine`` compares across engines.
+* **paced** (default): Poisson arrivals at ``--rate`` — measures the
+  latency distribution (p50/p99) under a live rate, where the async
+  engine's deadline policy and the sync engine's fill-blocking differ.
+
+Reported per run: p50/p99/mean latency, throughput (served / makespan),
+capacity (served / busy seconds), recompile count, pad-waste fraction,
+admission rejections. ``benchmarks/run.py::tab_engine`` turns these
+into the ``engine_*`` BENCH rows; CI smokes
+``--streams 200 --seconds 2`` (tools/ci.sh fast lane).
+
+Run: PYTHONPATH=src python -m benchmarks.loadgen --streams 100000
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import numpy as np
+
+LANE_NAMES = ("apply", "solve", "frame")
+
+
+# ------------------------------------------------------------- trace ----
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    """One deterministic open-loop workload (sorted by arrival time)."""
+
+    t_arrive: np.ndarray  # (R,) float64 seconds, nondecreasing
+    stream: np.ndarray  # (R,) int64 stream id in [0, n_streams)
+    lane: np.ndarray  # (R,) int8 index into LANE_NAMES
+    tenant: np.ndarray  # (R,) int64 admission-control bucket
+    signal: np.ndarray  # (R,) int64 index into the signal pool
+    n_streams: int
+    n_tenants: int
+    n_signals: int
+
+    @property
+    def n_requests(self) -> int:
+        return len(self.t_arrive)
+
+
+def make_trace(
+    n_streams: int,
+    seconds: float,
+    rate: float,
+    *,
+    seed: int = 0,
+    hot_frac: float = 0.01,
+    hot_mass: float = 0.5,
+    lane_mix: tuple[float, float, float] = (0.90, 0.08, 0.02),
+    n_tenants: int = 8,
+    n_signals: int = 64,
+    burst: bool = False,
+) -> Trace:
+    """Poisson arrivals with hot-spot stream skew; deterministic by seed.
+
+    ``hot_frac`` of the stream ids (the "hot set") receive ``hot_mass``
+    of the requests; the rest spread uniformly over the cold set — the
+    skew real sensor fleets show (a few busy intersections, many quiet
+    ones). ``burst=True`` collapses every arrival to t=0 (capacity
+    measurement: panels always full).
+    """
+    if not 0.0 < hot_frac < 1.0:
+        raise ValueError(f"hot_frac must be in (0,1), got {hot_frac}")
+    rng = np.random.default_rng(seed)
+    n_requests = max(1, int(round(rate * seconds)))
+
+    if burst:
+        t_arrive = np.zeros(n_requests)
+    else:
+        t_arrive = np.cumsum(rng.exponential(1.0 / rate, n_requests))
+
+    n_hot = max(1, int(round(hot_frac * n_streams)))
+    is_hot = rng.random(n_requests) < hot_mass
+    hot_ids = rng.integers(0, n_hot, n_requests)
+    cold_ids = (
+        rng.integers(0, max(n_streams - n_hot, 1), n_requests) + n_hot
+    ).clip(max=n_streams - 1)
+    stream = np.where(is_hot, hot_ids, cold_ids)
+
+    mix = np.asarray(lane_mix, np.float64)
+    lane = rng.choice(len(LANE_NAMES), size=n_requests, p=mix / mix.sum())
+
+    return Trace(
+        t_arrive=t_arrive,
+        stream=stream.astype(np.int64),
+        lane=lane.astype(np.int8),
+        tenant=(stream % n_tenants).astype(np.int64),
+        signal=rng.integers(0, n_signals, n_requests),
+        n_streams=n_streams,
+        n_tenants=n_tenants,
+        n_signals=n_signals,
+    )
+
+
+def make_signal_pool(n_vertices: int, n_signals: int, *, seed: int = 0):
+    """The (n_signals, N) float32 payload pool requests index into."""
+    rng = np.random.default_rng(seed + 1)
+    return rng.normal(size=(n_signals, n_vertices)).astype(np.float32)
+
+
+# ------------------------------------------------------------ report ----
+
+
+@dataclasses.dataclass
+class LoadReport:
+    """One engine x one trace: the numbers ``tab_engine`` rows read."""
+
+    engine: str
+    requests: int
+    served: int
+    rejected: int
+    p50_ms: float
+    p99_ms: float
+    mean_ms: float
+    throughput_rps: float  # served / virtual makespan
+    capacity_rps: float  # served / wall seconds inside panel executions
+    busy_s: float
+    makespan_s: float
+    recompiles: int
+    pad_waste: float
+    panels: int
+
+    def line(self) -> str:
+        return (
+            f"engine={self.engine} served={self.served}/{self.requests}"
+            f" rejected={self.rejected}"
+            f" p50_ms={self.p50_ms:.3f} p99_ms={self.p99_ms:.3f}"
+            f" throughput_rps={self.throughput_rps:.0f}"
+            f" capacity_rps={self.capacity_rps:.0f}"
+            f" busy_s={self.busy_s:.3f}"
+            f" recompiles={self.recompiles}"
+            f" pad_waste={self.pad_waste:.3f} panels={self.panels}"
+        )
+
+
+def _percentiles(latencies_s: list[float]) -> tuple[float, float, float]:
+    if not latencies_s:
+        return float("nan"), float("nan"), float("nan")
+    lat = np.asarray(latencies_s) * 1e3
+    return (
+        float(np.percentile(lat, 50)),
+        float(np.percentile(lat, 99)),
+        float(lat.mean()),
+    )
+
+
+# ----------------------------------------------------------- drivers ----
+
+
+def _drive_async(engine, trace: Trace, pool, frame_streams: int) -> LoadReport:
+    """Replay the trace against an :class:`AsyncGraphFilterEngine`.
+
+    Between arrivals the driver fires any lane whose oldest-request
+    deadline falls inside the gap (the engine pump a live service's
+    event loop would run), so partial panels ship exactly when the
+    latency budget says — not lazily at the next arrival.
+    """
+    from repro.serve import AdmissionError
+    from repro.serve.tickets import LANES
+
+    # Measure deltas so a warm replay (run_load(warm=True)) leaves the
+    # warmup's compiles/busy-time out of the reported numbers.
+    base_busy = engine.busy_s
+    base_recompiles = engine.recompiles
+    base_pad = engine.pad_slots
+    base_slots = engine.panel_slots
+    base_panels = engine.applies + engine.solves
+    engine._busy_until = 0.0  # fresh virtual timeline per replay
+
+    def pump_deadlines(t_now: float) -> None:
+        while True:
+            due = [
+                d
+                for lane in LANES
+                if (d := engine.scheduler.oldest_deadline(lane)) is not None
+                and d <= t_now
+            ]
+            if not due:
+                return
+            engine.step(now=min(due))
+
+    tickets = []
+    rejected = 0
+    for i in range(trace.n_requests):
+        t = float(trace.t_arrive[i])
+        pump_deadlines(t)
+        sig = pool[trace.signal[i]]
+        tenant = f"t{trace.tenant[i]}"
+        code = int(trace.lane[i])
+        try:
+            if code == 0:
+                tk = engine.submit(sig, tenant=tenant, now=t)
+            elif code == 1:
+                tk = engine.submit_solve(sig, tenant=tenant, now=t)
+            else:
+                tk = engine.submit_frame(
+                    int(trace.stream[i]) % frame_streams,
+                    sig,
+                    tenant=tenant,
+                    now=t,
+                )
+            tickets.append(tk)
+        except AdmissionError:
+            rejected += 1
+        engine.step(now=t)
+
+    # Post-arrival: keep honouring deadlines until every queue drains.
+    t = float(trace.t_arrive[-1]) if trace.n_requests else 0.0
+    while engine.scheduler.pending():
+        due = [
+            d
+            for lane in LANES
+            if (d := engine.scheduler.oldest_deadline(lane)) is not None
+        ]
+        t = max(t, min(due))
+        engine.step(now=t)
+
+    lat = [tk.latency_s for tk in tickets if tk.done]
+    p50, p99, mean = _percentiles(lat)
+    makespan = max(engine._busy_until, t) - (
+        float(trace.t_arrive[0]) if trace.n_requests else 0.0
+    )
+    served = len(lat)
+    busy = engine.busy_s - base_busy
+    slots = engine.panel_slots - base_slots
+    return LoadReport(
+        engine="async",
+        requests=trace.n_requests,
+        served=served,
+        rejected=rejected,
+        p50_ms=p50,
+        p99_ms=p99,
+        mean_ms=mean,
+        throughput_rps=served / max(makespan, 1e-9),
+        capacity_rps=served / max(busy, 1e-9),
+        busy_s=busy,
+        makespan_s=makespan,
+        recompiles=engine.recompiles - base_recompiles,
+        pad_waste=(engine.pad_slots - base_pad) / max(slots, 1),
+        panels=engine.applies + engine.solves - base_panels,
+    )
+
+
+def _drive_sync(engine, trace: Trace, pool, frame_streams: int) -> LoadReport:
+    """Replay the trace against the pr6 synchronous ``GraphFilterEngine``.
+
+    The sync engine blocks a lane's callers until its fixed-width panel
+    fills; the driver stamps the whole panel's completion on the same
+    single-server virtual timeline the async driver uses (flush wall
+    seconds measured around the auto-flushing ``submit_*``), so the two
+    reports are directly comparable.
+    """
+    busy_until = 0.0
+    busy_s = 0.0
+    panels = 0
+    lat: list[float] = []
+    pending: dict[int, list[float]] = {0: [], 1: [], 2: []}
+
+    def complete(lane_code: int, t_now: float, dt: float) -> None:
+        nonlocal busy_until, busy_s, panels
+        start = max(t_now, busy_until)
+        busy_until = start + dt
+        busy_s += dt
+        panels += 1
+        lat.extend(busy_until - ts for ts in pending[lane_code])
+        pending[lane_code].clear()
+
+    for i in range(trace.n_requests):
+        t = float(trace.t_arrive[i])
+        sig = pool[trace.signal[i]]
+        code = int(trace.lane[i])
+        t0 = time.perf_counter()
+        if code == 0:
+            out = engine.submit(sig)
+        elif code == 1:
+            out = engine.submit_solve(sig)
+        else:
+            out = engine.submit_frame(int(trace.stream[i]) % frame_streams, sig)
+        dt = time.perf_counter() - t0
+        pending[code].append(t)
+        if out is not None:
+            complete(code, t, dt)
+
+    t_end = float(trace.t_arrive[-1]) if trace.n_requests else 0.0
+    lane_flushes = ((0, engine.flush), (1, engine.flush_solves), (2, engine.flush_frames))
+    for code, flush in lane_flushes:
+        if not pending[code]:
+            continue
+        t0 = time.perf_counter()
+        flush()
+        complete(code, t_end, time.perf_counter() - t0)
+
+    p50, p99, mean = _percentiles(lat)
+    makespan = max(busy_until, t_end) - (
+        float(trace.t_arrive[0]) if trace.n_requests else 0.0
+    )
+    return LoadReport(
+        engine="sync",
+        requests=trace.n_requests,
+        served=len(lat),
+        rejected=0,
+        p50_ms=p50,
+        p99_ms=p99,
+        mean_ms=mean,
+        throughput_rps=len(lat) / max(makespan, 1e-9),
+        capacity_rps=len(lat) / max(busy_s, 1e-9),
+        busy_s=busy_s,
+        makespan_s=makespan,
+        recompiles=-1,  # the sync engine has no counter: every novel
+        pad_waste=0.0,  # shape retraces silently (the pr7 motivation)
+        panels=panels,
+    )
+
+
+def run_load(
+    trace: Trace,
+    filt,
+    *,
+    engine: str = "async",
+    backend: str = "dense",
+    solve_iters: int = 8,
+    max_panel: int = 128,
+    budget_s: float = 0.010,
+    panel_width: int = 8,
+    frame_streams: int = 16,
+    stream_opts: dict | None = None,
+    pool=None,
+    warm: bool = False,
+) -> LoadReport:
+    """Build the requested engine and replay ``trace`` through it.
+
+    ``max_panel``/``budget_s`` shape the async scheduler; ``panel_width``
+    is the sync engine's fixed width. ``frame_streams`` folds the trace's
+    stream population onto that many engine-side streaming lanes (only
+    frame-lane requests carry per-stream state). The solver lane runs a
+    fixed-budget FISTA (``solve_iters``) on both engines.
+
+    ``warm=True`` replays the identical trace once, unmeasured, before
+    the measured replay: the warmup hits exactly the buckets the
+    measurement will, so the reported ``recompiles`` is the *steady
+    state* count (0 when the compiled-program cache works) and the
+    capacity number excludes trace/compile time — the regime an
+    always-on service lives in.
+    """
+    from repro.serve import (
+        AsyncGraphFilterEngine,
+        GraphFilterEngine,
+        SchedulerConfig,
+        lasso_panel_solver,
+    )
+
+    if pool is None:
+        pool = make_signal_pool(filt.graph.n_vertices, trace.n_signals)
+    solver = lasso_panel_solver(filt, n_iters=solve_iters)
+    sopts = stream_opts if stream_opts is not None else {"max_delta_frac": 1.0}
+    if engine == "async":
+        eng = AsyncGraphFilterEngine(
+            filt,
+            backend=backend,
+            solver=solver,
+            config=SchedulerConfig(max_panel=max_panel, latency_budget_s=budget_s),
+            stream_opts=sopts,
+        )
+        if warm:
+            _drive_async(eng, trace, pool, frame_streams)
+        return _drive_async(eng, trace, pool, frame_streams)
+    if engine == "sync":
+        eng = GraphFilterEngine(
+            filt,
+            backend=backend,
+            panel_width=panel_width,
+            solver=solver,
+            stream_opts=sopts,
+        )
+        if warm:
+            _drive_sync(eng, trace, pool, frame_streams)
+        return _drive_sync(eng, trace, pool, frame_streams)
+    raise ValueError(f"unknown engine {engine!r} (use 'async' or 'sync')")
+
+
+# --------------------------------------------------------------- CLI ----
+
+
+def _build_filter(n: int, order: int):
+    import jax
+
+    from repro.core import graph, multipliers
+    from repro.filters import GraphFilter
+
+    kappa = 0.075 * float(np.sqrt(500.0 / n))
+    g = graph.connected_sensor_graph(
+        jax.random.PRNGKey(0),
+        n=n,
+        sigma=kappa * 0.99,
+        kappa=kappa,
+    )
+    return GraphFilter.from_multipliers([multipliers.tikhonov(1.0, 1)], order=order, graph=g)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--streams",
+        type=int,
+        default=100_000,
+        help="concurrent sensor-stream population",
+    )
+    ap.add_argument("--seconds", type=float, default=5.0, help="virtual arrival window")
+    ap.add_argument("--rate", type=float, default=1000.0, help="mean arrivals per virtual second")
+    ap.add_argument("--engine", choices=("async", "sync", "both"), default="both")
+    ap.add_argument("--n", type=int, default=256, help="graph vertices")
+    ap.add_argument("--order", type=int, default=20, help="Chebyshev order")
+    ap.add_argument("--backend", default="dense")
+    ap.add_argument("--panel", type=int, default=128, help="async max_panel (widest bucket)")
+    ap.add_argument(
+        "--panel-width",
+        type=int,
+        default=8,
+        help="sync fixed panel width (the pr6 default)",
+    )
+    ap.add_argument("--budget-ms", type=float, default=10.0, help="async per-lane latency budget")
+    ap.add_argument("--solve-iters", type=int, default=8)
+    ap.add_argument("--hot-frac", type=float, default=0.01)
+    ap.add_argument("--hot-mass", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--burst",
+        action="store_true",
+        help="all arrivals at t=0 (capacity measurement)",
+    )
+    ap.add_argument(
+        "--warm",
+        action="store_true",
+        help="replay the trace once unmeasured first "
+        "(steady-state numbers: recompiles should be 0)",
+    )
+    args = ap.parse_args()
+
+    trace = make_trace(
+        args.streams,
+        args.seconds,
+        args.rate,
+        seed=args.seed,
+        hot_frac=args.hot_frac,
+        hot_mass=args.hot_mass,
+        burst=args.burst,
+    )
+    filt = _build_filter(args.n, args.order)
+    pool = make_signal_pool(args.n, trace.n_signals, seed=args.seed)
+    print(
+        f"trace: {trace.n_requests} requests over {args.seconds}s virtual"
+        f" from {args.streams} streams"
+        f" (burst={int(args.burst)}, seed={args.seed})"
+    )
+    engines = ("async", "sync") if args.engine == "both" else (args.engine,)
+    for kind in engines:
+        rep = run_load(
+            trace,
+            filt,
+            engine=kind,
+            backend=args.backend,
+            solve_iters=args.solve_iters,
+            max_panel=args.panel,
+            budget_s=args.budget_ms / 1e3,
+            panel_width=args.panel_width,
+            pool=pool,
+            warm=args.warm,
+        )
+        print(rep.line(), flush=True)
+
+
+if __name__ == "__main__":
+    main()

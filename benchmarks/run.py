@@ -17,6 +17,10 @@ writes the machine-readable perf-trajectory record ``BENCH_<tag>.json``
   tab_streaming        streaming lane — full refilter vs delta filtering
                        (words/frame + wall time vs change fraction, output
                        parity) and warm-started vs cold solver iterations
+  tab_engine           serving engines under load (benchmarks/loadgen.py):
+                       async continuous-batching vs the sync micro-batcher
+                       — capacity, p50/p99 at an equal live rate, steady-
+                       state recompiles, pad waste
   tab_roofline         summary of the dry-run roofline table (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--full] [--tag TAG]
@@ -539,6 +543,72 @@ def tab_streaming(full: bool) -> None:
         backend="dense", shape=shape)
 
 
+# ------------------------------------------------------------- engine --
+
+
+def tab_engine(full: bool) -> None:
+    """Serving engines under the loadgen workload (DESIGN.md Sec. 9.4).
+
+    One deterministic mixed-lane trace (90% applies / 8% solves / 2%
+    frames, hot-spot stream skew) replayed through the async
+    continuous-batching engine and the pr6 synchronous micro-batcher,
+    both warm (the trace replays once unmeasured first, so recompiles
+    are steady-state and capacity excludes compile time):
+
+    * ``engine_*_capacity`` — warm burst (every request at t=0, panels
+      always full): timing column is busy us per request, derived
+      carries capacity (requests/s of pure service time).
+    * ``engine_*_paced`` — the same engines at an equal live Poisson
+      rate both can sustain: timing column is virtual-clock p99 us.
+    * ``engine_summary`` — the acceptance row: async/sync capacity
+      ratio (>=5x), p99 comparison at the equal rate, steady-state
+      recompile count (0 when the bucket cache works).
+    """
+    from benchmarks import loadgen
+
+    n, order, streams = 256, 20, 100_000
+    kappa = 0.075 * float(np.sqrt(500.0 / n))
+    g = graph.connected_sensor_graph(
+        jax.random.PRNGKey(0), n=n, sigma=kappa * 0.99, kappa=kappa)
+    filt = GraphFilter.from_multipliers(
+        [multipliers.tikhonov(1.0, 1)], order, graph=g)
+    pool = loadgen.make_signal_pool(n, 64)
+    shape = f"N={n},M={order},streams={streams}"
+
+    reqs = 4000 if full else 1000
+    burst = loadgen.make_trace(streams, reqs / 500.0, 500.0, burst=True)
+    caps = {}
+    for kind in ("async", "sync"):
+        rep = caps[kind] = loadgen.run_load(
+            burst, filt, engine=kind, warm=True, pool=pool)
+        row(f"engine_{kind}_capacity",
+            1e6 * rep.busy_s / max(rep.served, 1),
+            f"capacity_rps={rep.capacity_rps:.0f};served={rep.served}"
+            f";panels={rep.panels};recompiles={rep.recompiles}"
+            f";pad_waste={rep.pad_waste:.3f}",
+            backend="dense", shape=shape)
+
+    paced = loadgen.make_trace(streams, (reqs // 4) / 60.0, 60.0)
+    p99s = {}
+    for kind in ("async", "sync"):
+        rep = p99s[kind] = loadgen.run_load(
+            paced, filt, engine=kind, warm=True, pool=pool)
+        row(f"engine_{kind}_paced", 1e3 * rep.p99_ms,
+            f"rate_rps=60;p50_ms={rep.p50_ms:.3f};p99_ms={rep.p99_ms:.3f}"
+            f";throughput_rps={rep.throughput_rps:.0f}"
+            f";recompiles={rep.recompiles}",
+            backend="dense", shape=shape)
+
+    speedup = caps["async"].capacity_rps / max(caps["sync"].capacity_rps, 1e-9)
+    row("engine_summary", 0.0,
+        f"throughput_x={speedup:.1f};accept_ge_5x={int(speedup >= 5.0)}"
+        f";async_p99_ms={p99s['async'].p99_ms:.3f}"
+        f";sync_p99_ms={p99s['sync'].p99_ms:.3f}"
+        f";p99_no_worse={int(p99s['async'].p99_ms <= p99s['sync'].p99_ms)}"
+        f";steady_recompiles={caps['async'].recompiles}",
+        backend="dense", shape=shape)
+
+
 # ----------------------------------------------------------- roofline --
 
 
@@ -561,7 +631,7 @@ def tab_roofline(full: bool) -> None:
 
 BENCHES = [fig4_cheb_approx, tab_denoising, tab_comm_scaling,
            tab_wavelet_ista, tab_gossip, tab_kernel, tab_filter_backends,
-           tab_solvers, tab_streaming, tab_roofline]
+           tab_solvers, tab_streaming, tab_engine, tab_roofline]
 
 
 def main() -> None:

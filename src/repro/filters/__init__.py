@@ -5,7 +5,7 @@ Importing this package registers the shipped backends (``dense``, ``bsr``,
 architecture and README.md for the support matrix.
 """
 
-from repro.filters.api import GraphFilter
+from repro.filters.api import GraphFilter, bucket_size
 from repro.filters.registry import (
     FilterBackend,
     available_backends,
@@ -22,6 +22,7 @@ __all__ = [
     "available_backends",
     "backend_is_traceable",
     "backend_supports_sparse",
+    "bucket_size",
     "get_backend",
     "register_backend",
 ]

@@ -24,15 +24,43 @@ import dataclasses
 from typing import Any, Callable, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chebyshev
 from repro.core.graph import SensorGraph
 from repro.filters import registry
 
-__all__ = ["GraphFilter"]
+__all__ = ["GraphFilter", "bucket_size"]
 
 Multiplier = Callable[[np.ndarray], np.ndarray]
+
+_BUCKET_FLOOR = 32
+
+
+def bucket_size(n: int, cap: int | None = None, *, floor: int = _BUCKET_FLOOR) -> int:
+    """Round ``n`` up to a power-of-two bucket (optionally capped).
+
+    The shape-stability primitive shared by the streaming delta path
+    (submatrix sizes), the serving engine (panel widths), and
+    :meth:`GraphFilter.apply_panel`: quantizing a wobbling dimension to
+    power-of-two buckets means a handful of compiled programs serve every
+    workload instead of one trace per novel shape.
+
+    Parameters
+    ----------
+    n : int
+        The true size to cover (``n <= bucket_size(n, ...)`` unless capped).
+    cap : int, optional
+        Upper clamp — e.g. the full vertex count N for submatrices, or the
+        scheduler's ``max_panel`` for panel widths.
+    floor : int
+        Smallest bucket returned; coarser floors mean fewer programs.
+    """
+    b = floor
+    while b < n:
+        b *= 2
+    return b if cap is None else min(b, cap)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -181,6 +209,16 @@ class GraphFilter:
             self._states[key] = be.prepare(self, **opts)
         return self._states[key]
 
+    def prepare_backend(self, backend: str = "dense", **opts) -> None:
+        """Eagerly build (and cache) ``backend``'s prepared state.
+
+        Normally preparation happens lazily on the first apply; callers
+        staging a trace (``jax.jit`` over a filter call) use this so the
+        prepared operands are concrete before tracing begins.
+        """
+        be = registry.get_backend(backend)
+        self._backend_state(be, opts)
+
     def apply(
         self, f: jax.Array, *, backend: str = "dense", **opts
     ) -> jax.Array:
@@ -207,6 +245,73 @@ class GraphFilter:
         """
         be = registry.get_backend(backend)
         return be.apply(self, self._backend_state(be, opts), f, **opts)
+
+    def apply_panel(
+        self,
+        panel: jax.Array,
+        *,
+        backend: str = "dense",
+        width: int | None = None,
+        **opts,
+    ) -> jax.Array:
+        """Apply to an (N, F) panel zero-padded to a bucketed width.
+
+        The shape-bucketed serving entry: the panel's F dimension is
+        padded up to ``width`` (default: the next power-of-two bucket,
+        floor 8) before the backend apply and sliced back afterwards, so
+        callers with wobbling panel widths reuse a logarithmic number of
+        compiled programs instead of retriggering a trace per novel F.
+        Zero columns are exact pass-throughs — every shipped operation is
+        linear in the signal — so padding changes no output column.
+
+        Parameters
+        ----------
+        panel : jax.Array
+            (N, F) batch of F signals.
+        width : int, optional
+            Explicit target width (must be >= F); default buckets F.
+
+        Returns
+        -------
+        jax.Array
+            (eta, N, F) — identical to ``apply(panel)``.
+        """
+        f = jnp.asarray(panel)
+        if f.ndim != 2:
+            raise ValueError(f"apply_panel wants an (N, F) panel, got {f.shape}")
+        k = f.shape[1]
+        b = bucket_size(k, floor=8) if width is None else int(width)
+        if b < k:
+            raise ValueError(f"width={b} narrower than the panel's F={k}")
+        if b > k:
+            f = jnp.pad(f, ((0, 0), (0, b - k)))
+        out = self.apply(f, backend=backend, **opts)
+        return out[:, :, :k]
+
+    def panel_program(
+        self, *, backend: str = "dense", coeffs=None, **opts
+    ) -> Callable[[jax.Array], jax.Array]:
+        """Build a reusable fixed-shape apply program for a panel lane.
+
+        Returns ``panel (N, F) -> (eta, N, F)`` with the backend state
+        prepared eagerly and — on backends declaring the ``traceable``
+        capability — the whole apply wrapped in one ``jax.jit``, so a
+        serving engine can key compiled programs by panel bucket and
+        count recompiles exactly (one trace per program, on its first
+        call). Non-traceable backends (halo/grid stage host transfers)
+        return a plain callable; their compilation reuse lives in their
+        own prepared state.
+        """
+        be = registry.get_backend(backend)
+        state = self._backend_state(be, opts)
+        c = coeffs
+
+        def run(panel: jax.Array) -> jax.Array:
+            return be.apply(self, state, panel, coeffs=c, **opts)
+
+        if getattr(be, "traceable", False):
+            return jax.jit(run)
+        return run
 
     def apply_sparse(
         self,

@@ -45,6 +45,7 @@ from repro.core.distributed import (
     grid_cheb_apply_ca,
     grid_slab_matvec,
 )
+from repro.filters.api import bucket_size
 from repro.filters.registry import register_backend
 from repro.kernels import autotune, ops as kops, ref as kref
 
@@ -78,16 +79,9 @@ def _default_mesh(axis: str, n_parts: int | None) -> Mesh:
     return compat.make_mesh((n,), (axis,))
 
 
-_SPARSE_BUCKET_MIN = 32
-
-
-def _bucket_size(n: int, cap: int) -> int:
-    """Round ``n`` up to a power-of-two bucket (capped at ``cap``) so the
-    restricted delta apply compiles once per bucket, not once per frame."""
-    b = _SPARSE_BUCKET_MIN
-    while b < n:
-        b *= 2
-    return min(b, cap)
+# Power-of-two shape buckets (shared with the serving engine's panel
+# cache): the restricted delta apply compiles once per bucket, not once
+# per frame. Floor 32 = bucket_size's default.
 
 
 @jax.jit
@@ -168,7 +162,7 @@ class DenseBackend:
         idx = np.nonzero(reach)[0]
         delta = jnp.asarray(delta)
         n = delta.shape[0]
-        b = _bucket_size(len(idx), n)
+        b = bucket_size(len(idx), n)
         if b >= n:
             # Reach covers (almost) the whole graph — restriction buys
             # nothing; the full apply is the same work without the scatter.

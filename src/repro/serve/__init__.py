@@ -1,3 +1,16 @@
+"""Serving layer: batched engines over ``GraphFilter`` (DESIGN.md Secs.
+7.4/8/9).
+
+* :class:`GraphFilterEngine` — synchronous micro-batcher (fixed panel
+  width, caller-driven flushes).
+* :class:`AsyncGraphFilterEngine` — continuous batching: ticket-based
+  ``submit_*``/``poll``/``wait``, deadline-or-full panel forming across
+  the apply/solve/frame lanes, per-tenant admission control, and a
+  compiled-program cache keyed by power-of-two width buckets.
+"""
+
+from repro.serve.async_engine import AsyncGraphFilterEngine
+from repro.serve.cache import CompiledPanelCache
 from repro.serve.engine import (
     GraphFilterEngine,
     ServeEngine,
@@ -5,10 +18,19 @@ from repro.serve.engine import (
     make_decode_step,
     make_prefill,
 )
+from repro.serve.scheduler import AdmissionError, Scheduler, SchedulerConfig
+from repro.serve.tickets import LANES, Ticket
 
 __all__ = [
+    "AdmissionError",
+    "AsyncGraphFilterEngine",
+    "CompiledPanelCache",
     "GraphFilterEngine",
+    "LANES",
+    "Scheduler",
+    "SchedulerConfig",
     "ServeEngine",
+    "Ticket",
     "lasso_panel_solver",
     "make_decode_step",
     "make_prefill",

@@ -1,0 +1,369 @@
+"""``AsyncGraphFilterEngine`` — continuous-batching graph-filter serving.
+
+The synchronous :class:`repro.serve.GraphFilterEngine` is a micro-batcher:
+callers drive ``flush()`` themselves, panels are a fixed width, and every
+novel shape retriggers a jit trace. This engine is the production story
+(ROADMAP item 3, DESIGN.md Sec. 9):
+
+* **Ticket API** — ``submit`` / ``submit_solve`` / ``submit_frame`` enqueue
+  and return a :class:`~repro.serve.tickets.Ticket` immediately; callers
+  never block on panel fill. ``poll`` reads a ticket, ``wait`` pumps the
+  engine until it resolves.
+* **Continuous batching** — a :class:`~repro.serve.scheduler.Scheduler`
+  forms panels from the shared queue per lane: full ``max_panel`` panels
+  under load, deadline-forced partial panels when traffic is thin, under
+  per-tenant admission control.
+* **Compiled-program cache** — panels pack into power-of-two width buckets
+  (``repro.filters.bucket_size``), and one compiled program per
+  (lane, N, bucket) answers every panel in that bucket:
+  ``GraphFilter.panel_program`` for applies,
+  ``repro.solvers.lasso_panel_program`` for whole fixed-budget solves.
+  ``engine.recompiles`` is exact — steady state is zero.
+* **Virtual-clock mode** — every entry point takes ``now=``; when given,
+  completions are stamped on a single-server virtual timeline
+  (``start = max(now, busy_until)``, ``done = start + measured wall
+  seconds``), which is what ``benchmarks/loadgen.py`` uses to report
+  deterministic p50/p99 under 10^5+ simulated streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.filters import GraphFilter, backend_is_traceable, bucket_size
+from repro.serve.cache import CompiledPanelCache
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.tickets import LANES, Ticket
+from repro.solvers import LassoProblem, SolveResult, lasso_panel_program
+from repro.stream import StreamingFilter
+
+__all__ = ["AsyncGraphFilterEngine"]
+
+
+class AsyncGraphFilterEngine:
+    """Asynchronous continuous-batching front end for a ``GraphFilter``.
+
+    Parameters
+    ----------
+    filt : GraphFilter
+        The filter to serve (graph bound for graph-bound backends).
+    backend : str
+        ``GraphFilter`` backend answering apply panels (and, unless the
+        solver names its own, solve panels).
+    solver : callable, optional
+        ``panel -> SolveResult`` for the solve lane — build one with
+        :func:`repro.serve.lasso_panel_solver`. A solver built without an
+        explicit backend inherits the engine's (see
+        ``repro.serve.engine._bind_solver_backend``). When the solver is
+        a fixed-budget lasso spec on a traceable backend, the engine
+        compiles the *whole solve* per width bucket instead of calling it
+        eagerly.
+    config : SchedulerConfig
+        Batching policy: panel width cap, bucket floor, per-lane latency
+        budgets, per-tenant admission quota.
+    opts / stream_opts : dict
+        Backend options for every apply / per-stream ``StreamingFilter``
+        options, as on the synchronous engine.
+    clock : callable
+        0-arg seconds source for default timestamps (injectable for
+        tests; ``now=`` arguments override per call).
+    """
+
+    def __init__(
+        self,
+        filt: GraphFilter,
+        *,
+        backend: str = "bsr",
+        solver: Callable[[Any], SolveResult] | None = None,
+        config: SchedulerConfig | None = None,
+        opts: dict | None = None,
+        stream_opts: dict | None = None,
+        clock: Callable[[], float] = time.perf_counter,
+    ):
+        from repro.serve.engine import _bind_solver_backend
+
+        self.filt = filt
+        self.backend = backend
+        self.solver = _bind_solver_backend(solver, backend)
+        self.config = config or SchedulerConfig()
+        self.opts = dict(opts or {})
+        self.stream_opts = dict(stream_opts or {})
+        self.clock = clock
+
+        self.scheduler = Scheduler(self.config)
+        self.cache = CompiledPanelCache()
+        self._tids = itertools.count()
+        self._streams: dict[Any, StreamingFilter] = {}
+        self._busy_until = 0.0  # virtual-clock single-server frontier
+
+        # Accounting (mirrors the synchronous engine where lanes overlap).
+        self.served = 0
+        self.applies = 0
+        self.solved = 0
+        self.solves = 0
+        self.frames_served = 0
+        self.stream_words = 0
+        self.stream_latency_s = 0.0
+        self.panel_slots = 0  # bucketed slots executed (apply+solve lanes)
+        self.pad_slots = 0  # of those, zero-padding waste
+        self.busy_s = 0.0  # wall seconds inside panel executions
+
+    # -- submission (never blocks) -----------------------------------------
+
+    def submit(self, signal, *, tenant: str = "default", now: float | None = None) -> Ticket:
+        """Queue one (N,) signal on the apply lane; returns its ticket."""
+        return self._enqueue("apply", np.asarray(signal), tenant, now)
+
+    def submit_solve(self, signal, *, tenant: str = "default", now: float | None = None) -> Ticket:
+        """Queue one (N,) signal on the iterative-solve lane."""
+        if self.solver is None:
+            raise ValueError("engine has no solver=; build one with lasso_panel_solver()")
+        return self._enqueue("solve", np.asarray(signal), tenant, now)
+
+    def submit_frame(
+        self,
+        stream_id,
+        frame,
+        *,
+        tenant: str = "default",
+        now: float | None = None,
+    ) -> Ticket:
+        """Queue one (N,) frame on ``stream_id``'s streaming lane."""
+        return self._enqueue(
+            "frame",
+            (stream_id, np.asarray(frame)),
+            tenant,
+            now,
+            stream_id=stream_id,
+        )
+
+    def _enqueue(self, lane, payload, tenant, now, stream_id=None) -> Ticket:
+        t = self.clock() if now is None else now
+        ticket = Ticket(
+            tid=next(self._tids),
+            lane=lane,
+            tenant=tenant,
+            t_submit=t,
+            stream_id=stream_id,
+        )
+        self.scheduler.admit(ticket, payload)
+        return ticket
+
+    # -- the pump -----------------------------------------------------------
+
+    def step(self, now: float | None = None) -> int:
+        """Execute every panel the scheduling policy says is ready.
+
+        Returns the number of panels executed. With ``now=`` the engine
+        runs on the caller's virtual clock (completions stamped on the
+        single-server timeline); without, on ``self.clock``.
+        """
+        virtual = now is not None
+        t = self.clock() if now is None else now
+        executed = 0
+        for lane in LANES:
+            while (batch := self.scheduler.ready(lane, t)) is not None:
+                self._execute(lane, batch, t, virtual)
+                executed += 1
+        return executed
+
+    def drain(self, now: float | None = None) -> int:
+        """Force-flush everything pending, deadline or not."""
+        virtual = now is not None
+        t = self.clock() if now is None else now
+        executed = 0
+        for lane in LANES:
+            while (batch := self.scheduler.force(lane)) is not None:
+                self._execute(lane, batch, t, virtual)
+                executed += 1
+        return executed
+
+    def poll(self, ticket: Ticket, *, now: float | None = None):
+        """One pump, then the ticket's result — or None if still pending."""
+        if not ticket.done:
+            self.step(now=now)
+        return ticket.result if ticket.done else None
+
+    def wait(self, ticket: Ticket, *, now: float | None = None):
+        """Pump until ``ticket`` resolves (force-flushing its lane if the
+        deadline has not fired) and return its result."""
+        if not ticket.done:
+            self.step(now=now)
+        virtual = now is not None
+        t = self.clock() if now is None else now
+        while not ticket.done:
+            batch = self.scheduler.force(ticket.lane)
+            if batch is None:  # pragma: no cover - resolve() is unconditional
+                raise RuntimeError(f"ticket {ticket.tid} lost from its lane")
+            self._execute(ticket.lane, batch, t, virtual)
+        return ticket.result
+
+    # -- panel execution ----------------------------------------------------
+
+    def _execute(self, lane, batch, now: float, virtual: bool) -> None:
+        t0 = time.perf_counter()
+        results = self._run_panel(lane, batch)
+        dt = time.perf_counter() - t0
+        self.busy_s += dt
+        if virtual:
+            start = max(now, self._busy_until)
+            t_done = start + dt
+            self._busy_until = t_done
+        else:
+            t_done = self.clock()
+        for req, res in zip(batch, results):
+            req.ticket._resolve(res, t_done)
+            self.scheduler.release(req.ticket)
+
+    def _run_panel(self, lane, batch) -> list:
+        if lane == "apply":
+            return self._run_apply(batch)
+        if lane == "solve":
+            return self._run_solve(batch)
+        return self._run_frames(batch)
+
+    def _pack(self, batch) -> tuple[np.ndarray, int, int]:
+        """Stack (N,) payloads into a bucket-width zero-padded panel."""
+        k = len(batch)
+        panel = np.stack([req.payload for req in batch], axis=1)
+        if panel.dtype != np.float32:
+            panel = panel.astype(np.float32)
+        b = bucket_size(k, self.config.max_panel, floor=self.config.min_bucket)
+        if k < b:
+            panel = np.pad(panel, ((0, 0), (0, b - k)))
+        self.panel_slots += b
+        self.pad_slots += b - k
+        return panel, k, b
+
+    def _run_apply(self, batch) -> list[np.ndarray]:
+        panel, k, b = self._pack(batch)
+        prog = self.cache.get(
+            ("apply", self.backend, panel.shape[0], b),
+            lambda: self.filt.panel_program(backend=self.backend, **self.opts),
+        )
+        out = np.asarray(prog(jnp.asarray(panel)))  # (eta, N, b)
+        self.applies += 1
+        self.served += k
+        return [out[:, :, i] for i in range(k)]
+
+    def _run_solve(self, batch) -> list[SolveResult]:
+        panel, k, b = self._pack(batch)
+        solve_backend = getattr(self.solver, "backend", None) or self.backend
+        prog = self.cache.get(
+            ("solve", solve_backend, panel.shape[0], b),
+            lambda: self._build_solve_program(panel.shape[0]),
+        )
+        res = prog(jnp.asarray(panel))
+        x = np.asarray(res.x)  # (N, b)
+        aux = None if res.aux is None else np.asarray(res.aux)
+        self.solves += 1
+        self.solved += k
+        return [
+            dataclasses.replace(res, x=x[:, i], aux=None if aux is None else aux[..., i])
+            for i in range(k)
+        ]
+
+    def _build_solve_program(self, n: int):
+        """Compile the whole solve when the spec allows, else pass through.
+
+        A :func:`repro.serve.lasso_panel_solver` spec with a fixed budget
+        (``tol=None``) on a traceable backend becomes one jitted
+        ``lasso_panel_program`` per width bucket; anything else (custom
+        callables, tolerance-mode solves, host-loop backends) is served
+        eagerly — still shape-stable thanks to the bucketed pack.
+        """
+        from repro.serve.engine import _LassoPanelSolver
+
+        spec = self.solver
+        if not (
+            isinstance(spec, _LassoPanelSolver)
+            and spec.tol is None
+            and backend_is_traceable(spec.backend or "bsr")
+        ):
+            return spec
+        be = spec.backend or "bsr"
+        import jax
+
+        compiled = jax.jit(
+            lasso_panel_program(
+                spec.filt,
+                method=spec.method,
+                mu=spec.mu,
+                step=spec.step,
+                n_iters=spec.n_iters,
+                backend=be,
+                **spec.opts,
+            )
+        )
+        problem = LassoProblem(filt=spec.filt, y=np.zeros((n,), np.float32), mu=spec.mu)
+        mpi = problem.messages_per_iteration(be, **spec.opts)
+
+        def prog(panel):
+            x, a, hist = compiled(panel)
+            return SolveResult(
+                x=x,
+                aux=a,
+                history=np.asarray(hist, np.float64),
+                iterations=spec.n_iters,
+                converged=True,
+                method=spec.method,
+                backend=be,
+                messages_per_iteration=mpi,
+            )
+
+        return prog
+
+    def _run_frames(self, batch) -> list:
+        results = []
+        for req in batch:
+            stream_id, frame = req.payload
+            lane = self._streams.get(stream_id)
+            if lane is None:
+                lane = StreamingFilter(
+                    self.filt,
+                    backend=self.backend,
+                    opts=self.opts,
+                    **self.stream_opts,
+                )
+                self._streams[stream_id] = lane
+            res = lane.push(frame)
+            results.append(res)
+            self.frames_served += 1
+            self.stream_words += res.words
+            self.stream_latency_s += res.latency_s
+        return results
+
+    # -- observability -------------------------------------------------------
+
+    @property
+    def recompiles(self) -> int:
+        """Compiled-program builds so far (cache misses; 0 in steady state)."""
+        return self.cache.misses
+
+    @property
+    def pad_waste(self) -> float:
+        """Fraction of executed panel slots that were zero padding."""
+        return self.pad_slots / max(self.panel_slots, 1)
+
+    def stats(self) -> dict:
+        """Counters snapshot for the load harness / BENCH rows."""
+        return {
+            "served": self.served,
+            "applies": self.applies,
+            "solved": self.solved,
+            "solves": self.solves,
+            "frames_served": self.frames_served,
+            "pending": self.scheduler.pending(),
+            "admitted": self.scheduler.admitted,
+            "rejected": self.scheduler.rejected,
+            "busy_s": self.busy_s,
+            "pad_waste": self.pad_waste,
+            "recompiles": self.recompiles,
+            **{f"cache_{k}": v for k, v in self.cache.stats().items()},
+        }

@@ -52,19 +52,61 @@ __all__ = [
 ]
 
 
-def make_decode_step(cfg: ModelConfig, par: ParallelConfig,
-                     rules: ShardingRules | None = None) -> Callable:
+def make_decode_step(
+    cfg: ModelConfig, par: ParallelConfig, rules: ShardingRules | None = None
+) -> Callable:
     def decode_step(params, token, cache):
         return lm.decode_step(params, token, cache, cfg, par, rules)
+
     return decode_step
 
 
-def make_prefill(cfg: ModelConfig, par: ParallelConfig,
-                 rules: ShardingRules | None = None,
-                 s_max: int | None = None) -> Callable:
+def make_prefill(
+    cfg: ModelConfig,
+    par: ParallelConfig,
+    rules: ShardingRules | None = None,
+    s_max: int | None = None,
+) -> Callable:
     def prefill(params, tokens):
         return lm.prefill(params, tokens, cfg, par, rules, s_max=s_max)
+
     return prefill
+
+
+_UNSET = object()
+
+
+def _bind_solver_backend(solver, backend: str):
+    """Bind a backend-less panel solver to the engine's backend.
+
+    A :func:`lasso_panel_solver` built without an explicit ``backend=``
+    declares ``backend=None`` ("inherit the engine's"), so the apply and
+    solve lanes cannot silently disagree. Binding returns a *copy* via
+    ``dataclasses.replace`` — mutating in place would leak this engine's
+    backend into a solver object shared with another engine.
+
+    Solvers with an explicit backend — or arbitrary callables that never
+    declare one — pass through untouched. A non-dataclass solver that
+    *does* declare ``backend=None`` is an error we refuse loudly: the old
+    truthiness check (``getattr(..., "") is None``) skipped such solvers
+    silently, and ``dataclasses.replace`` would raise a confusing
+    ``TypeError`` deep inside ``__post_init__`` if it didn't.
+    """
+    if solver is None:
+        return None
+    declared = getattr(solver, "backend", _UNSET)
+    if declared is not None:
+        # Explicit backend, or no backend contract at all: use as-is.
+        return solver
+    if not dataclasses.is_dataclass(solver):
+        raise TypeError(
+            f"solver {type(solver).__name__!r} declares backend=None "
+            "(meaning 'inherit the engine's backend') but is not a "
+            "dataclass, so the engine cannot bind a copy with "
+            "dataclasses.replace(). Construct it with an explicit "
+            "backend= instead."
+        )
+    return dataclasses.replace(solver, backend=backend)
 
 
 @dataclasses.dataclass
@@ -79,13 +121,12 @@ class ServeEngine:
     rules: ShardingRules | None = None
 
     def __post_init__(self):
-        self._decode = jax.jit(make_decode_step(self.cfg, self.par,
-                                                self.rules))
-        self._prefill = jax.jit(make_prefill(self.cfg, self.par, self.rules,
-                                             s_max=self.s_max))
+        self._decode = jax.jit(make_decode_step(self.cfg, self.par, self.rules))
+        self._prefill = jax.jit(make_prefill(self.cfg, self.par, self.rules, s_max=self.s_max))
 
-    def generate(self, prompts: np.ndarray, max_new_tokens: int,
-                 eos_id: int | None = None, seed: int = 0) -> np.ndarray:
+    def generate(
+        self, prompts: np.ndarray, max_new_tokens: int, eos_id: int | None = None, seed: int = 0
+    ) -> np.ndarray:
         """prompts: (B, S0) int32 -> (B, max_new_tokens) generated ids."""
         b = prompts.shape[0]
         logits, cache = self._prefill(self.params, jnp.asarray(prompts))
@@ -107,9 +148,8 @@ class ServeEngine:
     def _sample(self, logits, key):
         if self.temperature <= 0.0:
             return jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
-        return jax.random.categorical(
-            key, logits / self.temperature, axis=-1
-        ).astype(jnp.int32)[:, None]
+        sampled = jax.random.categorical(key, logits / self.temperature, axis=-1)
+        return sampled.astype(jnp.int32)[:, None]
 
 
 @dataclasses.dataclass
@@ -157,13 +197,7 @@ class GraphFilterEngine:
         self.frames_served = 0
         self.stream_words = 0
         self.stream_latency_s = 0.0
-        # A lasso_panel_solver built without an explicit backend inherits
-        # the engine's, so the two lanes cannot silently disagree. Bind a
-        # copy: mutating would leak this engine's backend into a solver
-        # object shared with another engine.
-        if getattr(self.solver, "backend", "") is None:
-            self.solver = dataclasses.replace(self.solver,
-                                              backend=self.backend)
+        self.solver = _bind_solver_backend(self.solver, self.backend)
 
     def submit(self, signal) -> list[np.ndarray] | None:
         """Queue one (N,) signal; returns the panel's (eta, N) results —
@@ -178,9 +212,7 @@ class GraphFilterEngine:
         if not self._pending:
             return None
         panel, k = self._pack(self._pending)
-        out = self.filt.apply(
-            jnp.asarray(panel), backend=self.backend, **self.opts
-        )
+        out = self.filt.apply(jnp.asarray(panel), backend=self.backend, **self.opts)
         out = np.asarray(out)  # (eta, N, panel_width)
         self._pending.clear()
         self.served += k
@@ -194,9 +226,7 @@ class GraphFilterEngine:
         per-request :class:`SolveResult` list (submission order) when the
         panel fills."""
         if self.solver is None:
-            raise ValueError(
-                "engine has no solver=; build one with lasso_panel_solver()"
-            )
+            raise ValueError("engine has no solver=; build one with lasso_panel_solver()")
         self._pending_solves.append(np.asarray(signal))
         if len(self._pending_solves) >= self.panel_width:
             return self.flush_solves()
@@ -216,9 +246,7 @@ class GraphFilterEngine:
             # solver configured
             return None
         if self.solver is None:
-            raise ValueError(
-                "engine has no solver=; build one with lasso_panel_solver()"
-            )
+            raise ValueError("engine has no solver=; build one with lasso_panel_solver()")
         panel, k = self._pack(self._pending_solves)
         res = self.solver(jnp.asarray(panel))
         x = np.asarray(res.x)  # (N, panel_width)
@@ -227,10 +255,7 @@ class GraphFilterEngine:
         self.solved += k
         self.solves += 1
         return [
-            dataclasses.replace(
-                res, x=x[:, i],
-                aux=None if aux is None else aux[..., i],
-            )
+            dataclasses.replace(res, x=x[:, i], aux=None if aux is None else aux[..., i])
             for i in range(k)
         ]
 
@@ -309,11 +334,15 @@ class _LassoPanelSolver:
     opts: dict
 
     def __call__(self, panel: jax.Array) -> SolveResult:
-        problem = LassoProblem(filt=self.filt, y=panel, mu=self.mu,
-                               step=self.step)
+        problem = LassoProblem(filt=self.filt, y=panel, mu=self.mu, step=self.step)
         return solve_problem(
-            problem, method=self.method, n_iters=self.n_iters,
-            tol=self.tol, backend=self.backend or "bsr", **self.opts)
+            problem,
+            method=self.method,
+            n_iters=self.n_iters,
+            tol=self.tol,
+            backend=self.backend or "bsr",
+            **self.opts,
+        )
 
 
 def lasso_panel_solver(
@@ -336,6 +365,13 @@ def lasso_panel_solver(
     Leave ``backend=None`` to inherit the owning engine's backend (set it
     explicitly only to make the lanes deliberately diverge).
     """
-    return _LassoPanelSolver(filt=filt, method=method, mu=mu, step=step,
-                             n_iters=n_iters, tol=tol, backend=backend,
-                             opts=opts)
+    return _LassoPanelSolver(
+        filt=filt,
+        method=method,
+        mu=mu,
+        step=step,
+        n_iters=n_iters,
+        tol=tol,
+        backend=backend,
+        opts=opts,
+    )

@@ -20,6 +20,7 @@ from repro.solvers.iterative import (
     conjugate_gradient,
     fista,
     ista,
+    lasso_panel_program,
     solve,
     wiener,
 )
@@ -33,6 +34,7 @@ __all__ = [
     "fista",
     "ista",
     "iterate",
+    "lasso_panel_program",
     "solve",
     "wiener",
 ]

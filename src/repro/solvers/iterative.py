@@ -32,7 +32,14 @@ from repro.filters import GraphFilter, backend_is_traceable
 from repro.solvers.api import GramProblem, LassoProblem, SolveResult
 from repro.solvers.loops import iterate
 
-__all__ = ["ista", "fista", "conjugate_gradient", "wiener", "solve"]
+__all__ = [
+    "ista",
+    "fista",
+    "conjugate_gradient",
+    "wiener",
+    "solve",
+    "lasso_panel_program",
+]
 
 
 def _lasso_setup(problem: LassoProblem, backend: str, opts: dict):
@@ -54,6 +61,54 @@ def _lasso_setup(problem: LassoProblem, backend: str, opts: dict):
         return jnp.sum(muv * jnp.abs(a))
 
     return y, tau, fwd, adj, soft, l1
+
+
+def _ista_machine(y, tau, fwd, adj, soft, l1):
+    """ISTA as (step, init, final): the eq. 21 update factored so the
+    host-driven solvers and the compiled panel program share one copy of
+    the math."""
+
+    def step(state):
+        a, obj_prev = state
+        r = y - adj(a)
+        obj = 0.5 * jnp.sum(r * r) + l1(a)
+        a_new = soft(a + tau * fwd(r))
+        stop = jnp.abs(obj_prev - obj) / jnp.maximum(jnp.abs(obj), 1.0)
+        return (a_new, obj), (obj, stop)
+
+    def init(a0):
+        return (a0, jnp.asarray(jnp.inf, y.dtype))
+
+    def final(state):
+        return state[0]
+
+    return step, init, final
+
+
+def _fista_machine(y, tau, fwd, adj, soft, l1):
+    """FISTA as (step, init, final) — see :func:`_ista_machine`."""
+
+    def step(state):
+        a_prev, z, t, obj_prev = state
+        r = y - adj(z)
+        obj = 0.5 * jnp.sum(r * r) + l1(z)
+        a = soft(z + tau * fwd(r))
+        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
+        z_new = a + ((t - 1.0) / t_new) * (a - a_prev)
+        stop = jnp.abs(obj_prev - obj) / jnp.maximum(jnp.abs(obj), 1.0)
+        return (a, z_new, t_new, obj), (obj, stop)
+
+    def init(a0):
+        return (a0, a0, jnp.asarray(1.0, y.dtype),
+                jnp.asarray(jnp.inf, y.dtype))
+
+    def final(state):
+        return state[0]
+
+    return step, init, final
+
+
+_LASSO_MACHINES = {"ista": _ista_machine, "fista": _fista_machine}
 
 
 def _lasso_result(problem, state_a, hist, k, conv, method, backend, opts):
@@ -95,19 +150,12 @@ def ista(
     y, tau, fwd, adj, soft, l1 = _lasso_setup(problem, backend, opts)
     a0 = fwd(y) if a0 is None else jnp.asarray(a0, y.dtype)
 
-    def step(state):
-        a, obj_prev = state
-        r = y - adj(a)
-        obj = 0.5 * jnp.sum(r * r) + l1(a)
-        a_new = soft(a + tau * fwd(r))
-        stop = jnp.abs(obj_prev - obj) / jnp.maximum(jnp.abs(obj), 1.0)
-        return (a_new, obj), (obj, stop)
-
-    init = (a0, jnp.asarray(jnp.inf, y.dtype))
-    (a, _), hist, k, conv = iterate(
-        step, init, n_iters=n_iters, tol=tol,
+    step, init, final = _ista_machine(y, tau, fwd, adj, soft, l1)
+    state, hist, k, conv = iterate(
+        step, init(a0), n_iters=n_iters, tol=tol,
         traceable=backend_is_traceable(backend))
-    return _lasso_result(problem, a, hist, k, conv, "ista", backend, opts)
+    return _lasso_result(problem, final(state), hist, k, conv, "ista",
+                         backend, opts)
 
 
 def fista(
@@ -133,22 +181,12 @@ def fista(
     y, tau, fwd, adj, soft, l1 = _lasso_setup(problem, backend, opts)
     a0 = fwd(y) if a0 is None else jnp.asarray(a0, y.dtype)
 
-    def step(state):
-        a_prev, z, t, obj_prev = state
-        r = y - adj(z)
-        obj = 0.5 * jnp.sum(r * r) + l1(z)
-        a = soft(z + tau * fwd(r))
-        t_new = 0.5 * (1.0 + jnp.sqrt(1.0 + 4.0 * t * t))
-        z_new = a + ((t - 1.0) / t_new) * (a - a_prev)
-        stop = jnp.abs(obj_prev - obj) / jnp.maximum(jnp.abs(obj), 1.0)
-        return (a, z_new, t_new, obj), (obj, stop)
-
-    init = (a0, a0, jnp.asarray(1.0, y.dtype),
-            jnp.asarray(jnp.inf, y.dtype))
-    (a, _, _, _), hist, k, conv = iterate(
-        step, init, n_iters=n_iters, tol=tol,
+    step, init, final = _fista_machine(y, tau, fwd, adj, soft, l1)
+    state, hist, k, conv = iterate(
+        step, init(a0), n_iters=n_iters, tol=tol,
         traceable=backend_is_traceable(backend))
-    return _lasso_result(problem, a, hist, k, conv, "fista", backend, opts)
+    return _lasso_result(problem, final(state), hist, k, conv, "fista",
+                         backend, opts)
 
 
 def _colsum(u: jax.Array, v: jax.Array) -> jax.Array:
@@ -241,6 +279,64 @@ def wiener(
         x0=x0, n_iters=n_iters, tol=tol, backend=backend, **opts)
     xhat = filt.gram(res.x, backend=backend, **opts)
     return dataclasses.replace(res, x=xhat, aux=res.x, method="wiener")
+
+
+def lasso_panel_program(
+    filt: GraphFilter,
+    *,
+    method: str = "fista",
+    mu: float | jax.Array = 1.0,
+    step: float | None = None,
+    n_iters: int = 40,
+    backend: str = "dense",
+    **opts,
+):
+    """Build a pure whole-solve panel program — ONE jit-able function.
+
+    Returns ``y (N, F) -> (x, a, history)`` running the complete
+    fixed-budget ``method`` lasso solve: ``x`` is the (N, F) denoised
+    panel, ``a`` the (eta, N, F) coefficients, ``history`` the
+    (n_iters,) float32 panel-summed objective trace. Unlike
+    :func:`ista`/:func:`fista` — which drive ``lax.scan`` eagerly and
+    re-trace on every call — the returned function stages pure jax end
+    to end, so a serving engine can wrap it in ``jax.jit`` once per
+    panel-width bucket and answer every subsequent panel from the
+    compiled-program cache (DESIGN.md Sec. 9).
+
+    Requires a ``traceable`` backend and a fixed iteration budget:
+    tolerance-based early exit yields data-dependent iteration counts,
+    which cannot live inside one compiled program.
+    """
+    if not backend_is_traceable(backend):
+        raise ValueError(
+            f"lasso_panel_program needs a traceable backend; {backend!r} "
+            "stages host transfers (use ista/fista's host loop instead)"
+        )
+    try:
+        machine = _LASSO_MACHINES[method]
+    except KeyError:
+        raise ValueError(
+            f"unknown lasso method {method!r}; use 'ista' or 'fista'"
+        ) from None
+    # Prepare backend state eagerly so the first traced call closes over
+    # concrete operands instead of baking preparation into the trace.
+    filt.prepare_backend(backend, **opts)
+
+    def run(y: jax.Array):
+        problem = LassoProblem(filt=filt, y=y, mu=mu, step=step)
+        y2, tau, fwd, adj, soft, l1 = _lasso_setup(problem, backend, opts)
+        stepf, init, final = machine(y2, tau, fwd, adj, soft, l1)
+
+        def body(state, _):
+            state, (trace, _stop) = stepf(state)
+            return state, jnp.asarray(trace, jnp.float32)
+
+        state, hist = jax.lax.scan(body, init(fwd(y2)), None,
+                                   length=n_iters)
+        a = final(state)
+        return filt.adjoint(a, backend=backend, **opts), a, hist
+
+    return run
 
 
 def solve(problem, *, method: str | None = None, **kw) -> SolveResult:

@@ -1,0 +1,337 @@
+"""Serving-engine tests: sync partial-panel parity and lane ordering
+(ISSUE 7 satellite), the async continuous-batching engine (tickets,
+deadline/full panel forming, compiled-program cache steady state,
+admission control, mixed-lane parity), the solver-backend binding fix,
+and the load-generator (determinism + tiny end-to-end runs)."""
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks import loadgen
+from repro.core import graph, multipliers
+from repro.filters import GraphFilter, bucket_size
+from repro.serve import (
+    AdmissionError,
+    AsyncGraphFilterEngine,
+    GraphFilterEngine,
+    SchedulerConfig,
+    lasso_panel_solver,
+)
+from repro.serve.engine import _bind_solver_backend
+from repro.solvers import LassoProblem, solve as solve_problem
+from repro.stream import StreamingFilter
+
+ORDER = 8
+
+
+@pytest.fixture(scope="module")
+def setting():
+    """96-node sensor graph + 2-multiplier union filter + signal pool."""
+    g = graph.connected_sensor_graph(
+        jax.random.PRNGKey(1), n=96, sigma=0.17, kappa=0.18)
+    filt = GraphFilter.from_multipliers(
+        [multipliers.tikhonov(1.0, 1), multipliers.heat(0.5)],
+        order=ORDER, graph=g)
+    rng = np.random.default_rng(3)
+    sigs = rng.normal(size=(16, g.n_vertices)).astype(np.float32)
+    return g, filt, sigs
+
+
+def _solo_apply(filt, sig):
+    return np.asarray(filt.apply(np.asarray(sig), backend="dense"))
+
+
+# ------------------------------------------------------ bucket/panel ----
+
+
+def test_bucket_size_properties():
+    assert bucket_size(1) == 32  # default floor
+    assert [bucket_size(k, floor=8) for k in (1, 8, 9, 16, 17, 100)] == [
+        8, 8, 16, 16, 32, 128]
+    assert bucket_size(100, 64, floor=8) == 64  # cap clamps
+    # Monotone and power-of-two (times the floor).
+    vals = [bucket_size(k, floor=8) for k in range(1, 200)]
+    assert vals == sorted(vals)
+    assert all(v & (v - 1) == 0 for v in vals)
+
+
+@pytest.mark.parametrize("backend", ["dense", "bsr"])
+def test_apply_panel_bucket_parity(setting, backend):
+    """apply_panel pads to the bucket and slices back: exact parity."""
+    _, filt, sigs = setting
+    panel = np.asarray(sigs[:5].T)  # (N, 5) -> bucket 8
+    got = np.asarray(filt.apply_panel(panel, backend=backend))
+    want = np.asarray(filt.apply(panel, backend=backend))
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ------------------------------------------------- sync engine parity ----
+
+
+@pytest.mark.parametrize("backend", ["dense", "bsr"])
+def test_sync_partial_flush_zero_pad_parity(setting, backend):
+    """A partial panel is zero-padded; every answered column must equal
+    the per-signal solo apply (zero columns are exact pass-throughs)."""
+    _, filt, sigs = setting
+    eng = GraphFilterEngine(filt, backend=backend, panel_width=8)
+    for s in sigs[:3]:  # 3 < panel_width: stays pending
+        assert eng.submit(s) is None
+    outs = eng.flush()
+    assert len(outs) == 3 and eng.served == 3 and eng.applies == 1
+    for s, out in zip(sigs[:3], outs):
+        np.testing.assert_allclose(
+            out, np.asarray(filt.apply(np.asarray(s), backend=backend)),
+            atol=1e-5)
+
+
+def test_sync_interleaved_lanes_out_of_order_flush(setting):
+    """Interleaved submissions across all three lanes, flushed in a
+    different order, keep per-lane submission order and solo parity."""
+    _, filt, sigs = setting
+    eng = GraphFilterEngine(
+        filt, backend="dense", panel_width=8,
+        solver=lasso_panel_solver(filt, n_iters=4),
+        stream_opts={"max_delta_frac": 1.0})
+    eng.submit(sigs[0])
+    eng.submit_solve(sigs[1])
+    eng.submit_frame("a", sigs[2])
+    eng.submit(sigs[3])
+    eng.submit_frame("a", sigs[4])
+    eng.submit_solve(sigs[5])
+
+    frames = eng.flush_frames()  # out-of-order: frames first
+    solves = eng.flush_solves()
+    applies = eng.flush()
+
+    for sig, out in zip((sigs[0], sigs[3]), applies):
+        np.testing.assert_allclose(out, _solo_apply(filt, sig), atol=1e-5)
+    ref = StreamingFilter(filt, backend="dense", max_delta_frac=1.0)
+    for sig, res in zip((sigs[2], sigs[4]), frames):
+        np.testing.assert_allclose(
+            res.out, ref.push(np.asarray(sig)).out, atol=1e-5)
+    for sig, res in zip((sigs[1], sigs[5]), solves):
+        want = solve_problem(
+            LassoProblem(filt=filt, y=np.asarray(sig), mu=1.0),
+            method="fista", n_iters=4, backend="dense")
+        np.testing.assert_allclose(res.x, want.x, atol=1e-5)
+
+
+# ------------------------------------------------------- async engine ----
+
+
+def _async_engine(filt, **cfg):
+    defaults = dict(max_panel=8, min_bucket=4, latency_budget_s=0.05)
+    defaults.update(cfg)
+    return AsyncGraphFilterEngine(
+        filt, backend="dense",
+        solver=lasso_panel_solver(filt, n_iters=4),
+        config=SchedulerConfig(**defaults),
+        stream_opts={"max_delta_frac": 1.0})
+
+
+def test_async_ticket_lifecycle_and_deadline(setting):
+    """Tickets pend inside the budget, ship at the deadline, and carry
+    virtual-clock latencies; results match the solo apply."""
+    _, filt, sigs = setting
+    eng = _async_engine(filt)
+    tk = eng.submit(sigs[0], now=0.0)
+    assert not tk.done and tk.latency_s is None
+    assert eng.poll(tk, now=0.01) is None  # inside the budget: pending
+    assert eng.poll(tk, now=0.049) is None
+    out = eng.poll(tk, now=0.05)  # deadline fires
+    assert tk.done and out is not None
+    np.testing.assert_allclose(out, _solo_apply(filt, sigs[0]), atol=1e-5)
+    assert tk.latency_s == pytest.approx(0.05 + eng.busy_s)
+
+
+def test_async_full_panel_fires_without_deadline(setting):
+    _, filt, sigs = setting
+    eng = _async_engine(filt, max_panel=4)
+    tks = [eng.submit(s, now=0.0) for s in sigs[:4]]
+    eng.step(now=0.0)  # full panel: no deadline wait needed
+    assert all(t.done for t in tks)
+    for t, s in zip(tks, sigs[:4]):
+        np.testing.assert_allclose(t.result, _solo_apply(filt, s), atol=1e-5)
+
+
+def test_async_wait_forces_partial_panel(setting):
+    _, filt, sigs = setting
+    eng = _async_engine(filt)
+    tk = eng.submit(sigs[0], now=0.0)
+    out = eng.wait(tk, now=0.0)  # force-flush, deadline not reached
+    np.testing.assert_allclose(out, _solo_apply(filt, sigs[0]), atol=1e-5)
+
+
+def test_async_submission_order_within_lane(setting):
+    _, filt, sigs = setting
+    eng = _async_engine(filt, max_panel=4)
+    tks = [eng.submit(s, now=0.0) for s in sigs[:6]]  # 4 full + 2 partial
+    eng.step(now=0.0)
+    eng.drain(now=0.0)
+    assert [t.done for t in tks] == [True] * 6
+    assert [t.tid for t in tks] == sorted(t.tid for t in tks)
+    for t, s in zip(tks, sigs[:6]):
+        np.testing.assert_allclose(t.result, _solo_apply(filt, s), atol=1e-5)
+
+
+def test_async_mixed_lane_parity(setting):
+    """Interleaved apply/solve/frame tickets each match their solo path."""
+    _, filt, sigs = setting
+    eng = _async_engine(filt)
+    ta = eng.submit(sigs[0], now=0.0)
+    ts = eng.submit_solve(sigs[1], now=0.0)
+    tf0 = eng.submit_frame("s", sigs[2], now=0.0)
+    tf1 = eng.submit_frame("s", sigs[3], now=0.0)
+    eng.drain(now=0.0)
+    np.testing.assert_allclose(ta.result, _solo_apply(filt, sigs[0]),
+                               atol=1e-5)
+    want = solve_problem(
+        LassoProblem(filt=filt, y=np.asarray(sigs[1]), mu=1.0),
+        method="fista", n_iters=4, backend="dense")
+    np.testing.assert_allclose(ts.result.x, want.x, atol=1e-5)
+    assert ts.result.iterations == 4 and ts.result.method == "fista"
+    # Frames of one stream run in submission order through shared state.
+    ref = StreamingFilter(filt, backend="dense", max_delta_frac=1.0)
+    np.testing.assert_allclose(
+        tf0.result.out, ref.push(np.asarray(sigs[2])).out, atol=1e-5)
+    np.testing.assert_allclose(
+        tf1.result.out, ref.push(np.asarray(sigs[3])).out, atol=1e-5)
+
+
+def test_async_cache_steady_state_zero_recompiles(setting):
+    """THE acceptance assertion: replaying an identical workload adds
+    zero cache misses — every panel bucket compiled exactly once."""
+    _, filt, sigs = setting
+    eng = _async_engine(filt, max_panel=8)
+
+    def workload(t0):
+        tks = [eng.submit(s, now=t0) for s in sigs[:11]]  # buckets 8 + 4
+        tks.append(eng.submit_solve(sigs[11], now=t0))
+        eng.step(now=t0)
+        eng.drain(now=t0)
+        assert all(t.done for t in tks)
+
+    workload(0.0)
+    warm_recompiles = eng.recompiles
+    assert warm_recompiles >= 3  # apply b=8, apply b=4, solve b=4
+    hits0 = eng.cache.hits
+    workload(1.0)
+    assert eng.recompiles == warm_recompiles  # steady state: 0 new traces
+    assert eng.cache.hits > hits0
+
+
+def test_async_pad_waste_accounting(setting):
+    _, filt, sigs = setting
+    eng = _async_engine(filt, max_panel=8, min_bucket=4)
+    for s in sigs[:3]:  # 3 requests pad to bucket 4
+        eng.submit(s, now=0.0)
+    eng.drain(now=0.0)
+    assert eng.panel_slots == 4 and eng.pad_slots == 1
+    assert eng.pad_waste == pytest.approx(0.25)
+
+
+def test_async_admission_control(setting):
+    _, filt, sigs = setting
+    eng = _async_engine(filt, max_pending_per_tenant=2)
+    eng.submit(sigs[0], tenant="a", now=0.0)
+    eng.submit(sigs[1], tenant="a", now=0.0)
+    with pytest.raises(AdmissionError):
+        eng.submit(sigs[2], tenant="a", now=0.0)
+    assert eng.scheduler.rejected == 1
+    eng.submit(sigs[3], tenant="b", now=0.0)  # other tenants unaffected
+    eng.drain(now=0.0)  # resolving releases the quota
+    eng.submit(sigs[4], tenant="a", now=0.0)
+
+
+def test_async_solve_without_solver_raises(setting):
+    _, filt, sigs = setting
+    eng = AsyncGraphFilterEngine(filt, backend="dense")
+    with pytest.raises(ValueError, match="no solver"):
+        eng.submit_solve(sigs[0], now=0.0)
+
+
+# -------------------------------------------- solver-backend binding ----
+
+
+def test_solver_binding_inherits_engine_backend(setting):
+    _, filt, _ = setting
+    spec = lasso_panel_solver(filt, n_iters=4)  # backend=None: inherit
+    eng = GraphFilterEngine(filt, backend="dense", solver=spec)
+    assert eng.solver.backend == "dense"
+    assert eng.solver is not spec and spec.backend is None  # bound a COPY
+
+
+def test_solver_binding_keeps_explicit_backend(setting):
+    _, filt, _ = setting
+    spec = lasso_panel_solver(filt, n_iters=4, backend="bsr")
+    eng = GraphFilterEngine(filt, backend="dense", solver=spec)
+    assert eng.solver.backend == "bsr"
+    assert eng.solver is spec  # untouched
+
+
+def test_solver_binding_plain_callable_passes_through():
+    def custom(panel):  # no backend contract at all
+        raise NotImplementedError
+
+    assert _bind_solver_backend(custom, "dense") is custom
+    assert _bind_solver_backend(None, "dense") is None
+
+
+def test_solver_binding_non_dataclass_none_backend_raises():
+    """The pre-PR7 truthiness check skipped these silently (or blew up
+    inside dataclasses.replace); now it is a clear TypeError."""
+
+    class BadSolver:
+        backend = None
+
+        def __call__(self, panel):
+            raise NotImplementedError
+
+    with pytest.raises(TypeError, match="backend=None"):
+        _bind_solver_backend(BadSolver(), "dense")
+
+
+# ----------------------------------------------------------- loadgen ----
+
+
+def test_loadgen_trace_deterministic():
+    kw = dict(seconds=2.0, rate=100.0, seed=7)
+    a = loadgen.make_trace(1000, **kw)
+    b = loadgen.make_trace(1000, **kw)
+    for field in ("t_arrive", "stream", "lane", "tenant", "signal"):
+        np.testing.assert_array_equal(getattr(a, field), getattr(b, field))
+    c = loadgen.make_trace(1000, seconds=2.0, rate=100.0, seed=8)
+    assert not np.array_equal(a.t_arrive, c.t_arrive)
+
+
+def test_loadgen_trace_shape_and_skew():
+    tr = loadgen.make_trace(10_000, seconds=10.0, rate=500.0, seed=0,
+                            hot_frac=0.01, hot_mass=0.5)
+    assert tr.n_requests == 5000
+    assert np.all(np.diff(tr.t_arrive) >= 0)
+    assert set(np.unique(tr.lane)) <= {0, 1, 2}
+    assert tr.stream.min() >= 0 and tr.stream.max() < 10_000
+    # Hot set (1% of streams) carries far more than its uniform share.
+    hot_share = np.mean(tr.stream < 100)
+    assert hot_share > 0.3
+    burst = loadgen.make_trace(100, seconds=1.0, rate=50.0, burst=True)
+    assert np.all(burst.t_arrive == 0.0)
+
+
+def test_loadgen_run_both_engines(setting):
+    """Tiny end-to-end run: every request served, async steady-state
+    recompiles 0 under warm replay, latencies finite."""
+    _, filt, _ = setting
+    tr = loadgen.make_trace(50, seconds=1.0, rate=40.0, seed=1)
+    pool = loadgen.make_signal_pool(filt.graph.n_vertices, tr.n_signals)
+    rep_a = loadgen.run_load(tr, filt, engine="async", warm=True,
+                             max_panel=8, solve_iters=2, pool=pool)
+    rep_s = loadgen.run_load(tr, filt, engine="sync", panel_width=4,
+                             solve_iters=2, pool=pool)
+    for rep in (rep_a, rep_s):
+        assert rep.served == tr.n_requests and rep.rejected == 0
+        assert np.isfinite(rep.p50_ms) and np.isfinite(rep.p99_ms)
+        assert rep.busy_s > 0 and rep.panels > 0
+    assert rep_a.recompiles == 0  # warm replay: the cache held

@@ -156,10 +156,20 @@ def main() -> int:
 
     baseline = load_rows(baseline_path)
     fresh = load_rows(fresh_path)
-    key_rows = {k: r for k, r in baseline.items() if r["median_ms"] >= args.min_ms}
+    # Key rows: timings above the noise floor, plus every engine_* serving
+    # row — the engine rows are the north-star throughput/latency claim, so
+    # their *existence* is always enforced; their ratio is only gated when
+    # the baseline timing clears the floor (sub-floor medians are noise at
+    # CI-runner resolution, same as everywhere else).
+    key_rows = {
+        k: r
+        for k, r in baseline.items()
+        if r["median_ms"] >= args.min_ms or k[1].startswith("engine_")
+    }
     print(
-        f"perf gate: {len(key_rows)} key rows (baseline >= {args.min_ms} ms) "
-        f"of {len(baseline)} baseline rows; threshold {args.threshold:.2f}x"
+        f"perf gate: {len(key_rows)} key rows (baseline >= {args.min_ms} ms "
+        f"or engine_*) of {len(baseline)} baseline rows; "
+        f"threshold {args.threshold:.2f}x"
     )
 
     failures: list[str] = []
@@ -171,6 +181,12 @@ def main() -> int:
             continue
         base_ms = base_row["median_ms"]
         fresh_ms = fresh_row["median_ms"]
+        if base_ms < args.min_ms:
+            print(
+                f"  [PRESENT   ] {op}: {base_ms:9.3f} ms baseline below "
+                "floor; existence checked, ratio not gated"
+            )
+            continue
         attempts = 0
         while fresh_ms / base_ms > args.threshold and attempts < args.retries:
             attempts += 1

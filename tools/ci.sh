@@ -31,7 +31,8 @@ python -m pip install -r requirements-dev.txt
 # `ruff format --check` is a ratchet: it covers the paths below (new
 # subsystems land formatted); extend FORMAT_PATHS as older files get
 # reformatted rather than formatting the whole tree in one noise commit.
-FORMAT_PATHS=(src/repro/stream tools/bench_check.py)
+FORMAT_PATHS=(src/repro/stream src/repro/serve benchmarks/loadgen.py
+              tools/bench_check.py)
 if python -m ruff --version >/dev/null 2>&1; then
   python -m ruff check .
   python -m ruff format --check "${FORMAT_PATHS[@]}"
@@ -53,6 +54,10 @@ fi
 case "$LANE" in
   fast)
     python -m pytest -x -q -m "not slow" "${TIMEOUT_ARGS[@]}"
+    # Serving-path smoke: the load generator must drive both engines end
+    # to end on a small trace (full-size runs live in the perf-gate job).
+    PYTHONPATH=src python -m benchmarks.loadgen --streams 200 --seconds 2 \
+      --rate 200
     ;;
   full)
     python -m pytest -x -q "${TIMEOUT_ARGS[@]}"
