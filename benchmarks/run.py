@@ -21,6 +21,11 @@ writes the machine-readable perf-trajectory record ``BENCH_<tag>.json``
                        async continuous-batching vs the sync micro-batcher
                        — capacity, p50/p99 at an equal live rate, steady-
                        state recompiles, pad waste
+  tab_churn            topology churn (repro.dynamic, DESIGN.md Sec. 10):
+                       mobile-sensor convoy scenario — incremental frame
+                       latency + words and plan-repair latency vs the full
+                       re-partition + re-filter baseline, parity vs the
+                       dense oracle, steady-state churn-kernel retraces
   tab_roofline         summary of the dry-run roofline table (if present)
 
 Run: PYTHONPATH=src python -m benchmarks.run [--full] [--tag TAG]
@@ -609,6 +614,135 @@ def tab_engine(full: bool) -> None:
         backend="dense", shape=shape)
 
 
+# -------------------------------------------------------------- churn --
+
+
+def tab_churn(full: bool) -> None:
+    """Topology churn under the mobile-sensor convoy workload (DESIGN.md
+    Sec. 10). A 1600-slot fleet with a drifting convoy (~3% of edges
+    change per frame) streams through one ``StreamingFilter`` with
+    per-frame ``GraphDelta``s. Three comparisons, all against the
+    from-scratch baseline on the *same* evolved graph:
+
+    * ``churn_incremental_frame`` vs ``churn_full_rebuild_frame`` —
+      wall time per frame: churn-corrected restricted kernels + plan
+      repair vs full re-partition + full dense refilter.
+    * words/frame — restricted-walk accounting vs the full model
+      ``order * halo_words`` of a freshly rebuilt plan.
+    * ``churn_repair_plan`` — ``repair_partition_plan`` vs
+      ``build_partition_plan`` on the post-delta adjacency.
+
+    ``churn_summary`` carries the acceptance bits: parity <= 1e-5 vs the
+    dense oracle on every frame, latency/words/repair each < 0.5x the
+    baseline at <= 5% churn, and zero churn-kernel retraces over the
+    second half of the run (bucket set warm)."""
+    from repro.core.chebyshev import cheb_apply_dense
+    from repro.core.distributed import repair_partition_plan
+    from repro.dynamic import kernel_trace_counts, mobile_sensor_scenario
+    from repro.dynamic.delta import apply_delta_inplace
+
+    n_slots, order, n_parts = 1600, 10, 8
+    n_frames = 14 if full else 10
+    t0 = time.perf_counter()
+    sc = mobile_sensor_scenario(
+        n_slots, n_frames, mobility="convoy", seed=7,
+        cluster_radius=0.07, speed=0.012,
+        birth_rate=0.2, death_rate=0.2, bump_radius=0.12)
+    gen_s = time.perf_counter() - t0
+    g = sc.graph0
+    shape = f"N={n_slots},M={order},P={n_parts}"
+
+    # 1.5x headroom on the AM bound keeps the polynomial certified across
+    # every frame (no re-expansion frames in the steady-state numbers).
+    lmax0 = 1.5 * float(g.lmax_bound())
+    filt = GraphFilter.from_multipliers(
+        [multipliers.heat(1.0), lambda x: x / (1.0 + x)],
+        order, graph=g, lmax=lmax0)
+    lane = StreamingFilter(filt, backend="dense", n_parts=n_parts,
+                           max_delta_frac=0.9)
+    lane.push(sc.frames[0].signal)  # cold frame (captures the Krylov stack)
+
+    # Host-side evolving reference state for the baselines + oracle.
+    adj = np.array(np.asarray(g.adjacency, np.float32))
+    lap = np.diag(adj.sum(axis=1)) - adj
+    coords = np.array(np.asarray(g.coords))
+    plan_prev = build_partition_plan(adj, coords, n_parts)
+    coeffs32 = np.asarray(filt.coeffs, np.float32)
+    # Warm the dense oracle program once so baseline timings are compiled.
+    jax.block_until_ready(
+        cheb_apply_dense(jnp.asarray(lap, jnp.float32),
+                         sc.frames[0].signal, coeffs32, filt.lmax))
+
+    lat_inc, lat_base, lat_repair, lat_rebuild = [], [], [], []
+    words_inc, words_full, modes = [], [], []
+    parity = 0.0
+    trace_mid = None
+    mid = 1 + (len(sc.frames) - 1) // 2
+    for i, fr in enumerate(sc.frames[1:], start=1):
+        t0 = time.perf_counter()
+        res = lane.push(fr.signal, delta=fr.delta)
+        lat_inc.append(time.perf_counter() - t0)
+        words_inc.append(res.words)
+        modes.append(res.mode)
+
+        # Evolve the reference graph, then time the from-scratch baseline
+        # on it: full re-partition + full dense refilter.
+        apply_delta_inplace(adj, lap, fr.delta)
+        if fr.delta.coords is not None:
+            coords = np.array(fr.delta.coords)
+        t0 = time.perf_counter()
+        plan_rep = repair_partition_plan(plan_prev, adj, fr.delta.touched)
+        lat_repair.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        plan_new = build_partition_plan(adj, coords, n_parts)
+        dt_rebuild = time.perf_counter() - t0
+        lat_rebuild.append(dt_rebuild)
+        plan_prev = plan_rep
+        t0 = time.perf_counter()
+        ref = jax.block_until_ready(
+            cheb_apply_dense(jnp.asarray(lap, jnp.float32),
+                             fr.signal, coeffs32, filt.lmax))
+        lat_base.append(dt_rebuild + (time.perf_counter() - t0))
+        words_full.append(order * plan_new.halo_words)
+        parity = max(parity, float(np.max(np.abs(lane._out - np.asarray(ref)))))
+        if i == mid:
+            trace_mid = dict(kernel_trace_counts())
+    retraces = sum(kernel_trace_counts().values()) - sum(trace_mid.values())
+
+    med = lambda xs: float(np.median(xs))  # noqa: E731
+    lat_ratio = med(lat_inc) / med(lat_base)
+    words_ratio = float(np.mean(words_inc)) / float(np.mean(words_full))
+    rep_ratio = med(lat_repair) / med(lat_rebuild)
+    n_churn = sum(1 for m in modes if m == "churn")
+    row("churn_incremental_frame", med(lat_inc) * 1e6,
+        f"frames={len(modes)};churn_frames={n_churn}"
+        f";mean_churn={sc.mean_churn:.4f}"
+        f";words_mean={np.mean(words_inc):.0f}"
+        f";reexpansions={lane.reexpansions};gen_s={gen_s:.2f}",
+        backend="dense", shape=shape,
+        messages=int(np.mean(words_inc)))
+    row("churn_full_rebuild_frame", med(lat_base) * 1e6,
+        f"words_full_mean={np.mean(words_full):.0f}"
+        f";model=order*halo_words(fresh plan)",
+        backend="dense", shape=shape,
+        messages=int(np.mean(words_full)))
+    row("churn_repair_plan", med(lat_repair) * 1e6,
+        f"rebuild_us={med(lat_rebuild) * 1e6:.1f}"
+        f";repair_ratio={rep_ratio:.3f}",
+        backend="dense", shape=shape)
+    row("churn_summary", 0.0,
+        f"latency_ratio={lat_ratio:.3f};words_ratio={words_ratio:.3f}"
+        f";repair_ratio={rep_ratio:.3f};parity={parity:.1e}"
+        f";retraces_steady={retraces}"
+        f";accept_latency_lt_half={int(lat_ratio < 0.5)}"
+        f";accept_words_lt_half={int(words_ratio < 0.5)}"
+        f";accept_repair_lt_half={int(rep_ratio < 0.5)}"
+        f";accept_parity_le_1e5={int(parity <= 1e-5)}"
+        f";accept_churn_le_5pct={int(sc.mean_churn <= 0.05)}"
+        f";accept_zero_retraces={int(retraces == 0)}",
+        backend="dense", shape=shape)
+
+
 # ----------------------------------------------------------- roofline --
 
 
@@ -631,7 +765,7 @@ def tab_roofline(full: bool) -> None:
 
 BENCHES = [fig4_cheb_approx, tab_denoising, tab_comm_scaling,
            tab_wavelet_ista, tab_gossip, tab_kernel, tab_filter_backends,
-           tab_solvers, tab_streaming, tab_engine, tab_roofline]
+           tab_solvers, tab_streaming, tab_engine, tab_churn, tab_roofline]
 
 
 def main() -> None:

@@ -32,6 +32,7 @@ __all__ = [
     "cheb_coefficients",
     "cheb_eval",
     "cheb_apply",
+    "cheb_apply_krylov",
     "cheb_apply_dense",
     "cheb_adjoint_apply",
     "product_coefficients",
@@ -150,6 +151,48 @@ def cheb_apply(
         step, (t1, t0, acc), jnp.swapaxes(coeffs[:, 2:], 0, 1), unroll=unroll
     )
     return acc
+
+
+def cheb_apply_krylov(
+    matvec: Matvec,
+    f: jax.Array,
+    coeffs: jax.Array,
+    lmax: float | jax.Array,
+    *,
+    unroll: int = 1,
+) -> tuple[jax.Array, jax.Array]:
+    """``cheb_apply`` that also returns the Krylov stack ``{Tbar_k(L) f}``.
+
+    The topology-churn path (repro.dynamic) needs the intermediate
+    recurrence vectors: after a Laplacian delta ``L' = L + dL``, the
+    difference stack ``D_k = Tbar_k(L') f - Tbar_k(L) f`` obeys the same
+    shifted recurrence driven by ``dL @ Tbar_{k-1}(L) f``, so keeping the
+    stack makes the correction computable on a small induced submatrix
+    instead of refiltering from scratch (DESIGN.md Sec. 10).
+
+    Returns:
+      ``(out, tk)`` where ``out`` matches ``cheb_apply`` and ``tk`` has
+      shape ``(M+1,) + f.shape`` with ``tk[k] = Tbar_k(L) f``.
+    """
+    coeffs = jnp.asarray(coeffs, dtype=f.dtype)
+    alpha = jnp.asarray(lmax, dtype=f.dtype) / 2.0
+    t0 = f
+    t1 = (matvec(f) - alpha * f) / alpha
+    acc = _outer(0.5 * coeffs[:, 0], t0) + _outer(coeffs[:, 1], t1)
+
+    if coeffs.shape[1] <= 2:
+        return acc, jnp.stack([t0, t1])
+
+    def step(carry, c_k):
+        t_prev1, t_prev2, acc = carry
+        t_k = (2.0 / alpha) * (matvec(t_prev1) - alpha * t_prev1) - t_prev2
+        acc = acc + _outer(c_k, t_k)
+        return (t_k, t_prev1, acc), t_k
+
+    (_, _, acc), ts = jax.lax.scan(
+        step, (t1, t0, acc), jnp.swapaxes(coeffs[:, 2:], 0, 1), unroll=unroll
+    )
+    return acc, jnp.concatenate([jnp.stack([t0, t1]), ts], axis=0)
 
 
 def _outer(c: jax.Array, t: jax.Array) -> jax.Array:

@@ -49,7 +49,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import graph as graph_lib
 
-__all__ = ["PartitionPlan", "build_partition_plan", "distributed_cheb_apply",
+__all__ = ["PartitionPlan", "build_partition_plan", "repair_partition_plan",
+           "distributed_cheb_apply",
            "halo_matvec", "halo_cheb_apply_overlapped", "allgather_matvec",
            "DistributedGraphContext"]
 
@@ -82,6 +83,12 @@ class PartitionPlan:
         first and issues its exchange before the interior matvec.
       boundary_counts: (P,) true per-partition boundary-row counts
         (``n_boundary`` is their max, padded uniform for shard_map).
+      pair_counts: (P, P) used-lane counts — ``pair_counts[p, q]`` is the
+        number of vertices p receives from q per matvec (``halo_words`` is
+        its sum). Recorded by the builder so incremental plan repair can
+        tell used send lanes from zero padding without device->host
+        round-trips; ``None`` on plans built before churn support (repair
+        then recovers the counts from the halo tables).
     """
 
     order: np.ndarray
@@ -93,6 +100,7 @@ class PartitionPlan:
     n: int
     n_boundary: int = 1
     boundary_counts: np.ndarray | None = None
+    pair_counts: np.ndarray | None = None
 
     @property
     def n_parts(self) -> int:
@@ -210,7 +218,7 @@ def build_partition_plan(
     send_idx = np.zeros((n_parts, n_parts, max_halo), dtype=np.int32)
     l_halo = np.zeros((n_parts, n_local, n_parts * max_halo))
     l_own = np.zeros((n_parts, n_local, n_local))
-    halo_words = 0
+    pair_counts = np.zeros((n_parts, n_parts), dtype=np.int64)
     for p in range(n_parts):
         sl = slice(p * n_local, (p + 1) * n_local)
         l_own[p] = lap[sl, sl]
@@ -218,7 +226,7 @@ def build_partition_plan(
             if q == p:
                 continue
             t = need[p][q]  # global ids owned by q, needed by p
-            halo_words += len(t)
+            pair_counts[p, q] = len(t)
             # Sent vertices must sit in q's boundary block (symmetry).
             assert np.all(t - q * n_local < boundary_counts[q]), (p, q)
             # q sends these to p: record in q's send table, destination p.
@@ -231,11 +239,195 @@ def build_partition_plan(
         l_own=jnp.asarray(l_own, dtype),
         l_halo=jnp.asarray(l_halo, dtype),
         send_idx=jnp.asarray(send_idx),
-        halo_words=int(halo_words),
+        halo_words=int(pair_counts.sum()),
         n_local=n_local,
         n=n,
         n_boundary=n_boundary,
         boundary_counts=boundary_counts,
+        pair_counts=pair_counts,
+    )
+
+
+def repair_partition_plan(
+    plan: PartitionPlan, adjacency, touched, dtype=jnp.float32
+) -> PartitionPlan:
+    """Incrementally patch a plan after a topology delta (DESIGN.md Sec. 10).
+
+    ``touched`` must contain BOTH endpoints of every changed edge (what
+    ``GraphDelta.touched`` / ``apply_delta_inplace`` return); ``adjacency``
+    is the NEW (N, N) matrix. The vertex->partition assignment is kept, so
+    only the *dirty* partitions — owners of touched vertices — need new
+    tables. The correctness lemma behind the cheap path: a changed edge
+    makes both its endpoints touched, hence both their owners dirty; a
+    clean partition therefore kept every incident edge of every vertex it
+    owns, so its row values, boundary split, need sets and lane layout are
+    all provably unchanged. Per pair:
+
+    * dirty p, dirty q — recompute p's need set from q, q's send lanes and
+      p's halo block from fresh rows (as the builder does, locally);
+    * dirty p, clean q — p's halo block from q holds the same values in
+      the same lanes, only row-permuted by p's new boundary-first order;
+      p's send table to q remaps old local indices through the inverse
+      permutation (same vertices, new positions — still inside the
+      boundary block, asserted); q's tables are byte-identical.
+
+    Shape stability: ``n_boundary`` and ``max_halo`` only ever grow, and
+    only when a dirty partition actually needs more rows/lanes — otherwise
+    every array keeps its shape and cached shard_map programs serve the
+    repaired plan without retracing. Cost is O(|dirty| * n_local * N)
+    against the full rebuild's O(N^2) + P^2 table pass.
+
+    PR 6's overlap invariants are preserved (property-tested in
+    tests/test_dynamic.py): rows ``[0, boundary_counts[p])`` are exactly
+    the rows with off-partition columns, every used send lane lands below
+    the receiver's boundary count, and the exchange count per apply stays
+    exactly M (the schedule is agnostic to where the tables came from).
+    """
+    if plan.boundary_counts is None:
+        raise ValueError("repair requires a plan built with boundary_counts")
+    touched = np.unique(np.asarray(touched, dtype=np.int64))
+    if touched.size == 0:
+        return plan
+    a = np.asarray(adjacency)
+    n, n_local, n_parts = plan.n, plan.n_local, plan.n_parts
+    n_pad = n_local * n_parts
+    old_l_own = np.asarray(plan.l_own)
+    old_l_halo = np.asarray(plan.l_halo)
+    old_send = np.asarray(plan.send_idx)
+    max_halo = old_send.shape[-1]
+
+    # Slot bookkeeping in the *current* plan order. Real vertices occupy
+    # slots [0, n) (build asserts it; re-asserted below after the permute).
+    ids = np.full(n_pad, -1, dtype=np.int64)
+    ids[:n] = plan.order[:n]
+    slot_of = np.empty(n, dtype=np.int64)
+    slot_of[ids[:n]] = np.arange(n)
+    owner_vert = slot_of // n_local  # partition owning each original id
+
+    dirty = sorted(set(int(p) for p in np.unique(owner_vert[touched])))
+    dirty_set = set(dirty)
+
+    if plan.pair_counts is not None:
+        pair_counts = np.asarray(plan.pair_counts).copy()
+    else:
+        # Legacy plan: recover used-lane counts from the halo tables
+        # (same zero-pattern trick as plan_row_slabs).
+        pair_counts = np.zeros((n_parts, n_parts), dtype=np.int64)
+        for p in range(n_parts):
+            for q in range(n_parts):
+                if q == p:
+                    continue
+                cols = old_l_halo[p][:, q * max_halo : (q + 1) * max_halo]
+                pair_counts[p, q] = int(np.any(cols != 0.0, axis=0).sum())
+
+    # --- fresh Laplacian rows + boundary split for every dirty partition ---
+    boundary_counts = np.asarray(plan.boundary_counts).copy()
+    rows_new: dict[int, np.ndarray] = {}  # p -> (n_local, n) rows, OLD slot order
+    perms: dict[int, np.ndarray] = {}
+    for p in dirty:
+        sl = slice(p * n_local, (p + 1) * n_local)
+        ids_p = ids[sl]
+        real = ids_p >= 0
+        rp = ids_p[real]
+        rows = np.zeros((n_local, n))
+        rows[real] = -a[rp]
+        rows[np.nonzero(real)[0], rp] = a[rp].sum(axis=1, dtype=np.float64)
+        rows_new[p] = rows
+        own_col = np.zeros(n, dtype=bool)
+        own_col[rp] = True
+        is_boundary = np.any(rows[:, ~own_col] != 0.0, axis=1)
+        boundary_counts[p] = int(is_boundary.sum())
+        # Stable boundary-first reorder of the CURRENT local order. Padding
+        # rows are all-zero => interior => stay at the tail (stability).
+        perms[p] = np.concatenate(
+            [np.nonzero(is_boundary)[0], np.nonzero(~is_boundary)[0]]
+        )
+    n_boundary = max(plan.n_boundary, 1, int(boundary_counts.max()))
+
+    new_ids = ids.copy()
+    for p, perm in perms.items():
+        sl = slice(p * n_local, (p + 1) * n_local)
+        new_ids[sl] = ids[sl][perm]
+    assert np.all(new_ids[:n] >= 0), "padding escaped the global tail"
+    new_order = new_ids[:n]
+    slot_new = np.empty(n, dtype=np.int64)
+    slot_new[new_order] = np.arange(n)
+
+    # --- grow max_halo only if a dirty-dirty pair outgrew its lanes -------
+    colmasks = {p: np.any(rows_new[p] != 0.0, axis=0) for p in dirty}
+    needed = max_halo
+    for p in dirty:
+        cand = np.nonzero(colmasks[p])[0]
+        for q in dirty:
+            if q != p:
+                needed = max(needed, int((owner_vert[cand] == q).sum()))
+    if needed > max_halo:
+        l_halo = np.zeros((n_parts, n_local, n_parts * needed), old_l_halo.dtype)
+        send_idx = np.zeros((n_parts, n_parts, needed), old_send.dtype)
+        for p in range(n_parts):
+            for q in range(n_parts):
+                if q == p:
+                    continue
+                cnt = int(pair_counts[p, q])
+                l_halo[p][:, q * needed : q * needed + cnt] = old_l_halo[p][
+                    :, q * max_halo : q * max_halo + cnt
+                ]
+                send_idx[q, p, :cnt] = old_send[q, p, :cnt]
+        old_l_halo, old_send, max_halo = l_halo, send_idx, needed
+
+    l_own = old_l_own.copy()
+    l_halo = old_l_halo.copy()
+    send_idx = old_send.copy()
+
+    for p in dirty:
+        perm = perms[p]
+        inv = np.empty(n_local, dtype=np.int64)
+        inv[perm] = np.arange(n_local)
+        rows_p = rows_new[p][perm]  # rows in p's NEW local order
+        ids_p_new = new_ids[p * n_local : (p + 1) * n_local]
+        real = ids_p_new >= 0
+        blk = np.zeros((n_local, n_local))
+        blk[:, real] = rows_p[:, ids_p_new[real]]
+        l_own[p] = blk
+        cand = np.nonzero(colmasks[p])[0]
+        for q in range(n_parts):
+            if q == p:
+                continue
+            if q in dirty_set:
+                t = cand[owner_vert[cand] == q]
+                t = t[np.argsort(slot_new[t], kind="stable")]
+                cnt = len(t)
+                lanes = slot_new[t] - q * n_local
+                assert np.all(lanes < boundary_counts[q]), (p, q)
+                block = np.zeros((n_local, max_halo), l_halo.dtype)
+                block[:, :cnt] = rows_p[:, t]
+                l_halo[p][:, q * max_halo : (q + 1) * max_halo] = block
+                lane_tbl = np.zeros(max_halo, send_idx.dtype)
+                lane_tbl[:cnt] = lanes
+                send_idx[q, p] = lane_tbl
+                pair_counts[p, q] = cnt
+            else:
+                # Clean q: identical values/lanes, rows follow p's permute.
+                l_halo[p][:, q * max_halo : (q + 1) * max_halo] = old_l_halo[
+                    p
+                ][perm, q * max_halo : (q + 1) * max_halo]
+                cnt = int(pair_counts[q, p])  # lanes q reads from p
+                lane_tbl = np.zeros(max_halo, send_idx.dtype)
+                lane_tbl[:cnt] = inv[old_send[p, q, :cnt]]
+                assert np.all(lane_tbl[:cnt] < boundary_counts[p]), (p, q)
+                send_idx[p, q] = lane_tbl
+
+    return PartitionPlan(
+        order=new_order,
+        l_own=jnp.asarray(l_own, dtype),
+        l_halo=jnp.asarray(l_halo, dtype),
+        send_idx=jnp.asarray(send_idx),
+        halo_words=int(pair_counts.sum()),
+        n_local=n_local,
+        n=n,
+        n_boundary=n_boundary,
+        boundary_counts=boundary_counts,
+        pair_counts=pair_counts,
     )
 
 

@@ -190,17 +190,43 @@ def lmax_upper_bound(adjacency: jax.Array) -> jax.Array:
 
 
 def lmax_power_iteration(
-    laplacian_matrix: jax.Array, iters: int = 100
-) -> jax.Array:
+    laplacian_matrix: jax.Array,
+    iters: int = 100,
+    *,
+    v0: jax.Array | None = None,
+    seed: int = 0,
+    return_vector: bool = False,
+):
     """Tighter lambda_max estimate via power iteration (beyond-paper knob).
 
     A slightly inflated Rayleigh quotient (x1.01) keeps the Chebyshev domain
     valid even if the iteration has not fully converged.
+
+    Args:
+      v0: optional warm-start vector — e.g. the converged iterate from the
+        previous topology, which the churn re-certification path carries
+        across frames so a few iterations suffice after a small delta.
+        Normalized internally; must not be the zero vector.
+      seed: PRNG seed for the default start. The default is deterministic
+        per seed (plus an alternating component so the start is not
+        orthogonal to the top eigenspace on bipartite-ish graphs).
+      return_vector: also return the final iterate, for reuse as the next
+        call's ``v0``.
+
+    Returns:
+      The scalar estimate, or ``(estimate, vector)`` with ``return_vector``.
     """
     n = laplacian_matrix.shape[0]
-    v = jnp.ones((n,), laplacian_matrix.dtype) / jnp.sqrt(n)
-    # Add an alternating component so v is not orthogonal to the top space.
-    v = v + jnp.where(jnp.arange(n) % 2 == 0, 1.0, -1.0) / n
+    dtype = laplacian_matrix.dtype
+    if v0 is None:
+        v = jax.random.normal(jax.random.PRNGKey(seed), (n,), dtype)
+        v = v / jnp.sqrt(n)
+        # Alternating component: overlap with the top space on bipartite
+        # graphs, where the top eigenvector is sign-alternating.
+        v = v + jnp.where(jnp.arange(n) % 2 == 0, 1.0, -1.0) / n
+    else:
+        v = jnp.asarray(v0, dtype)
+    v = v / (jnp.linalg.norm(v) + 1e-30)
 
     def body(_, v):
         w = laplacian_matrix @ v
@@ -208,20 +234,40 @@ def lmax_power_iteration(
 
     v = jax.lax.fori_loop(0, iters, body, v)
     lam = v @ (laplacian_matrix @ v) / (v @ v)
-    return 1.01 * lam
+    est = 1.01 * lam
+    if return_vector:
+        return est, v
+    return est
 
 
-def is_connected(adjacency) -> bool:
-    """Host-side BFS connectivity check (the paper assumes connected G)."""
+def is_connected(adjacency, *, ignore_isolated: bool = False) -> bool:
+    """Host-side BFS connectivity check (the paper assumes connected G).
+
+    Args:
+      ignore_isolated: check connectivity of the subgraph induced on the
+        non-isolated vertices only. The churn slot-pool model parks left
+        (and not-yet-joined) sensors as isolated slots with every incident
+        edge zeroed; those should not count against fleet connectivity.
+        A graph with no edges at all is vacuously connected in this mode.
+    """
     a = np.asarray(adjacency) > 0
     n = a.shape[0]
+    has_edge = a.any(axis=1)
+    if ignore_isolated:
+        if not has_edge.any():
+            return True
+        start = int(np.argmax(has_edge))
+    else:
+        start = 0
     seen = np.zeros(n, dtype=bool)
     frontier = np.zeros(n, dtype=bool)
-    frontier[0] = seen[0] = True
+    frontier[start] = seen[start] = True
     while frontier.any():
         nxt = (a[frontier].any(axis=0)) & ~seen
         seen |= nxt
         frontier = nxt
+    if ignore_isolated:
+        return bool(seen[has_edge].all())
     return bool(seen.all())
 
 

@@ -1,0 +1,38 @@
+"""repro.dynamic — topology churn: incremental Laplacians, plan repair,
+and mobile-sensor workloads (DESIGN.md Sec. 10, ROADMAP item 5).
+
+The subsystem keeps the streaming stack exact and incremental while the
+shift operator itself changes between frames: ``GraphDelta`` describes the
+change, ``LmaxTracker`` keeps the Chebyshev domain certified without
+re-estimating ``lambda_max`` per frame, the churn kernels correct filter
+outputs on the M-hop neighborhood of the changed edges, and
+``repro.core.distributed.repair_partition_plan`` patches only the
+partitions a delta touches. ``mobile_sensor_scenario`` generates the
+random-waypoint / convoy workloads that exercise all of it.
+"""
+
+from .delta import (
+    GraphDelta,
+    LmaxTracker,
+    apply_delta_inplace,
+    apply_graph_delta,
+    churn_correction,
+    dense_cheb_apply_krylov,
+    kernel_trace_counts,
+    restricted_cheb_apply_krylov,
+)
+from .scenarios import MobileSensorScenario, ScenarioFrame, mobile_sensor_scenario
+
+__all__ = [
+    "GraphDelta",
+    "LmaxTracker",
+    "apply_delta_inplace",
+    "apply_graph_delta",
+    "churn_correction",
+    "dense_cheb_apply_krylov",
+    "kernel_trace_counts",
+    "restricted_cheb_apply_krylov",
+    "MobileSensorScenario",
+    "ScenarioFrame",
+    "mobile_sensor_scenario",
+]

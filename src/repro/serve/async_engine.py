@@ -19,6 +19,12 @@ novel shape retriggers a jit trace. This engine is the production story
   ``GraphFilter.panel_program`` for applies,
   ``repro.solvers.lasso_panel_program`` for whole fixed-budget solves.
   ``engine.recompiles`` is exact — steady state is zero.
+* **Bounded stream state** — per-stream ``StreamingFilter`` lanes are
+  evicted LRU past ``max_streams`` and/or after ``stream_ttl_s`` idle
+  seconds (``streams_evicted`` counts them); an evicted stream's next
+  frame simply recovers with one cold full apply. ``submit_frame``
+  accepts a per-frame ``delta=`` (:class:`repro.dynamic.GraphDelta`), so
+  the frame lane survives shift-operator churn mid-stream.
 * **Virtual-clock mode** — every entry point takes ``now=``; when given,
   completions are stamped on a single-server virtual timeline
   (``start = max(now, busy_until)``, ``done = start + measured wall
@@ -70,6 +76,16 @@ class AsyncGraphFilterEngine:
     opts / stream_opts : dict
         Backend options for every apply / per-stream ``StreamingFilter``
         options, as on the synchronous engine.
+    max_streams : int or None
+        Cap on live per-stream lanes. When a frame panel would leave more
+        than this many ``StreamingFilter`` states resident, the least
+        recently used lanes are dropped (their next frame recovers with
+        one full apply). None disables the cap.
+    stream_ttl_s : float or None
+        Idle time-to-live for stream lanes, measured on the engine clock
+        (virtual ``now=`` timestamps included): lanes whose last frame is
+        older than this are evicted at the next frame panel. None
+        disables TTL eviction.
     clock : callable
         0-arg seconds source for default timestamps (injectable for
         tests; ``now=`` arguments override per call).
@@ -84,6 +100,8 @@ class AsyncGraphFilterEngine:
         config: SchedulerConfig | None = None,
         opts: dict | None = None,
         stream_opts: dict | None = None,
+        max_streams: int | None = 4096,
+        stream_ttl_s: float | None = None,
         clock: Callable[[], float] = time.perf_counter,
     ):
         from repro.serve.engine import _bind_solver_backend
@@ -96,10 +114,16 @@ class AsyncGraphFilterEngine:
         self.stream_opts = dict(stream_opts or {})
         self.clock = clock
 
+        self.max_streams = max_streams
+        self.stream_ttl_s = stream_ttl_s
+
         self.scheduler = Scheduler(self.config)
         self.cache = CompiledPanelCache()
         self._tids = itertools.count()
+        # Insertion order doubles as LRU order: touching a stream pops and
+        # reinserts it, so the first key is always the coldest lane.
         self._streams: dict[Any, StreamingFilter] = {}
+        self._stream_seen: dict[Any, float] = {}
         self._busy_until = 0.0  # virtual-clock single-server frontier
 
         # Accounting (mirrors the synchronous engine where lanes overlap).
@@ -110,6 +134,7 @@ class AsyncGraphFilterEngine:
         self.frames_served = 0
         self.stream_words = 0
         self.stream_latency_s = 0.0
+        self.streams_evicted = 0
         self.panel_slots = 0  # bucketed slots executed (apply+solve lanes)
         self.pad_slots = 0  # of those, zero-padding waste
         self.busy_s = 0.0  # wall seconds inside panel executions
@@ -131,13 +156,21 @@ class AsyncGraphFilterEngine:
         stream_id,
         frame,
         *,
+        delta=None,
         tenant: str = "default",
         now: float | None = None,
     ) -> Ticket:
-        """Queue one (N,) frame on ``stream_id``'s streaming lane."""
+        """Queue one (N,) frame on ``stream_id``'s streaming lane.
+
+        ``delta`` is an optional :class:`repro.dynamic.GraphDelta` applied
+        to the stream's shift operator before this frame — the frame lane
+        survives topology churn mid-stream (DESIGN.md Sec. 10). The
+        engine's shared ``GraphFilter`` is never mutated; churn state
+        lives entirely inside the per-stream lane.
+        """
         return self._enqueue(
             "frame",
-            (stream_id, np.asarray(frame)),
+            (stream_id, np.asarray(frame), delta),
             tenant,
             now,
             stream_id=stream_id,
@@ -208,7 +241,7 @@ class AsyncGraphFilterEngine:
 
     def _execute(self, lane, batch, now: float, virtual: bool) -> None:
         t0 = time.perf_counter()
-        results = self._run_panel(lane, batch)
+        results = self._run_panel(lane, batch, now)
         dt = time.perf_counter() - t0
         self.busy_s += dt
         if virtual:
@@ -221,12 +254,12 @@ class AsyncGraphFilterEngine:
             req.ticket._resolve(res, t_done)
             self.scheduler.release(req.ticket)
 
-    def _run_panel(self, lane, batch) -> list:
+    def _run_panel(self, lane, batch, now: float) -> list:
         if lane == "apply":
             return self._run_apply(batch)
         if lane == "solve":
             return self._run_solve(batch)
-        return self._run_frames(batch)
+        return self._run_frames(batch, now)
 
     def _pack(self, batch) -> tuple[np.ndarray, int, int]:
         """Stack (N,) payloads into a bucket-width zero-padded panel."""
@@ -319,11 +352,11 @@ class AsyncGraphFilterEngine:
 
         return prog
 
-    def _run_frames(self, batch) -> list:
+    def _run_frames(self, batch, now: float) -> list:
         results = []
         for req in batch:
-            stream_id, frame = req.payload
-            lane = self._streams.get(stream_id)
+            stream_id, frame, gdelta = req.payload
+            lane = self._streams.pop(stream_id, None)
             if lane is None:
                 lane = StreamingFilter(
                     self.filt,
@@ -331,13 +364,39 @@ class AsyncGraphFilterEngine:
                     opts=self.opts,
                     **self.stream_opts,
                 )
-                self._streams[stream_id] = lane
-            res = lane.push(frame)
+            else:
+                self._stream_seen.pop(stream_id, None)
+            # Reinsert at the tail: dict order is the LRU order.
+            self._streams[stream_id] = lane
+            self._stream_seen[stream_id] = now
+            res = lane.push(frame, delta=gdelta)
             results.append(res)
             self.frames_served += 1
             self.stream_words += res.words
             self.stream_latency_s += res.latency_s
+        self._evict_streams(now)
         return results
+
+    def _evict_streams(self, now: float) -> None:
+        """Drop idle stream lanes: TTL pass first, then the LRU cap.
+
+        An evicted stream is not an error — its next frame is served as a
+        cold full apply by a fresh lane. This bounds resident per-stream
+        state (Chebyshev output panels, churn Krylov stacks) under the
+        100k-stream load profile, where most streams go quiet forever.
+        """
+        if self.stream_ttl_s is not None:
+            expired = [s for s, t in self._stream_seen.items() if now - t > self.stream_ttl_s]
+            for s in expired:
+                del self._streams[s]
+                del self._stream_seen[s]
+                self.streams_evicted += 1
+        if self.max_streams is not None:
+            while len(self._streams) > self.max_streams:
+                s = next(iter(self._streams))  # coldest lane
+                del self._streams[s]
+                del self._stream_seen[s]
+                self.streams_evicted += 1
 
     # -- observability -------------------------------------------------------
 
@@ -359,6 +418,8 @@ class AsyncGraphFilterEngine:
             "solved": self.solved,
             "solves": self.solves,
             "frames_served": self.frames_served,
+            "streams": len(self._streams),
+            "streams_evicted": self.streams_evicted,
             "pending": self.scheduler.pending(),
             "admitted": self.scheduler.admitted,
             "rejected": self.scheduler.rejected,

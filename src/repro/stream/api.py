@@ -13,6 +13,19 @@ output, filters the delta on the induced submatrix via the backend's
 ``sparse_input`` capability, and accumulates. Per-frame cost — flops and,
 on a partitioned deployment, halo words — scales with the boundary of
 change, not N.
+
+Topology churn (DESIGN.md Sec. 10) extends the same argument to the shift
+operator: ``push(frame, delta=GraphDelta(...))`` patches the Laplacian,
+re-certifies ``lmax`` incrementally (``repro.dynamic.LmaxTracker``),
+repairs the partition plan in place of a full re-partition, and corrects
+the cached output with the Krylov-difference recurrence — both stages
+exact on the M-hop neighbourhood of the changed-edge endpoints. A
+churn-active stream keeps a host-side graph copy plus the (M+1, N, F)
+Krylov stack of the previous input, and routes *every* subsequent apply
+through its own dense/restricted kernels (the shared ``GraphFilter`` still
+describes the original graph and must not be mutated — the async engine
+shares one across all streams). Backends without ``sparse_input`` degrade
+to a full (dense) refilter per churn frame but remain exact.
 """
 
 from __future__ import annotations
@@ -23,8 +36,21 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.distributed import PartitionPlan, build_partition_plan
-from repro.filters import GraphFilter, backend_supports_sparse
+from repro.core import chebyshev
+from repro.core.distributed import (
+    PartitionPlan,
+    build_partition_plan,
+    repair_partition_plan,
+)
+from repro.dynamic.delta import (
+    GraphDelta,
+    LmaxTracker,
+    apply_delta_inplace,
+    churn_correction,
+    dense_cheb_apply_krylov,
+    restricted_cheb_apply_krylov,
+)
+from repro.filters import GraphFilter, backend_supports_sparse, bucket_size
 
 __all__ = ["FrameResult", "StreamingFilter"]
 
@@ -40,8 +66,9 @@ class FrameResult:
         output, whichever path produced it).
     mode : str
         ``"full"`` (cold or above the delta threshold), ``"delta"``
-        (sparse-support path), or ``"cached"`` (frame identical to the
-        previous one — no filtering at all).
+        (sparse-support path), ``"churn"`` (topology delta corrected
+        incrementally on the changed-edge neighbourhood), or ``"cached"``
+        (frame identical to the previous one — no filtering at all).
     frame : int
         0-based frame index within the stream.
     changed : int
@@ -56,6 +83,9 @@ class FrameResult:
         deployment the stream is accounting for (0 without a plan).
     latency_s : float
         Wall-clock seconds spent answering this frame.
+    edges_changed : int
+        Edge weights that actually moved in this frame's topology delta
+        (0 for pure signal frames).
     """
 
     out: np.ndarray
@@ -65,6 +95,7 @@ class FrameResult:
     active: int
     words: int
     latency_s: float
+    edges_changed: int = 0
 
 
 class StreamingFilter:
@@ -99,6 +130,12 @@ class StreamingFilter:
         stays on ``backend``.
     opts : dict, optional
         Extra backend options forwarded to every apply.
+    lmax_headroom : float
+        Safety factor applied when churn pushes the certified ``lmax``
+        bound past the filter's domain and the coefficients must be
+        re-expanded from the multiplier bank (a rare, full-refilter
+        frame); the extra headroom absorbs further growth so re-expansion
+        does not recur every frame. Default 1.25.
     """
 
     def __init__(
@@ -111,6 +148,7 @@ class StreamingFilter:
         refresh_every: int | None = None,
         n_parts: int | None = None,
         opts: dict | None = None,
+        lmax_headroom: float = 1.25,
     ):
         self.filt = filt
         self.backend = backend
@@ -118,29 +156,138 @@ class StreamingFilter:
         self.atol = float(atol)
         self.refresh_every = refresh_every
         self.opts = dict(opts or {})
-        # Host-side copies made once per stream: the per-frame BFS walks
-        # the adjacency many times, and converting a device array every
-        # frame would dominate the delta path's cost.
-        self._adj_bool: np.ndarray | None = None
-        if filt.graph is not None:
-            self._adj_bool = np.asarray(filt.graph.adjacency) != 0.0
-        self._plan: PartitionPlan | None = None
-        self._send_counts: np.ndarray | None = None
+        self.lmax_headroom = float(lmax_headroom)
+        self._plan0: PartitionPlan | None = None
+        self._send_counts0: np.ndarray | None = None
         if n_parts is not None:
             if filt.graph is None:
                 raise ValueError("words accounting (n_parts=) needs a bound graph")
-            self._plan = build_partition_plan(filt.graph.adjacency, filt.graph.coords, n_parts)
-            self._send_counts = self._plan.vertex_send_counts(self._adj_bool)
+            adj_bool = np.asarray(filt.graph.adjacency) != 0.0
+            self._plan0 = build_partition_plan(
+                filt.graph.adjacency, filt.graph.coords, n_parts
+            )
+            self._send_counts0 = self._plan0.vertex_send_counts(adj_bool)
         self.reset()
 
     def reset(self) -> None:
-        """Drop all carried state; the next push is a cold full filter."""
+        """Drop all carried state; the next push is a cold full filter.
+
+        Also drops any accumulated topology churn: the stream snaps back
+        to ``filt.graph`` with the original partition plan, coefficients
+        and ``lmax`` (the shared ``GraphFilter`` is never mutated, so it
+        still describes the original graph).
+        """
         self._y: np.ndarray | None = None
         self._out: np.ndarray | None = None
         self.frames = 0
         self.full_refilters = 0
         self.delta_frames = 0
         self.words_total = 0
+        # Host-side copies made once per stream: the per-frame BFS walks
+        # the adjacency many times, and converting a device array every
+        # frame would dominate the delta path's cost.
+        self._adj_bool: np.ndarray | None = None
+        if self.filt.graph is not None:
+            self._adj_bool = np.asarray(self.filt.graph.adjacency) != 0.0
+        self._plan = self._plan0
+        self._send_counts = (
+            None if self._send_counts0 is None else self._send_counts0.copy()
+        )
+        self._owner: np.ndarray | None = (
+            self._plan.owner_of() if self._plan is not None else None
+        )
+        # Churn state (lazily activated by the first topology delta).
+        self._churn = False
+        self._adj: np.ndarray | None = None
+        self._lap: np.ndarray | None = None
+        self._coeffs: np.ndarray | None = None
+        self._lmax: float | None = None
+        self._tracker: LmaxTracker | None = None
+        self._tk: np.ndarray | None = None  # (M+1, N, F) Krylov stack of _y
+        self.churn_frames = 0
+        self.reexpansions = 0
+        self.graph_version = 0
+
+    @property
+    def recertifications(self) -> int:
+        """Exact-bound recomputations the lmax tracker has performed."""
+        return 0 if self._tracker is None else self._tracker.recertifications
+
+    # -- topology churn ---------------------------------------------------
+
+    def _activate_churn(self) -> None:
+        """First topology delta: snapshot the graph into mutable host state."""
+        if self.filt.graph is None:
+            raise ValueError("topology deltas need a graph-bound filter")
+        self._adj = np.array(self.filt.graph.adjacency, dtype=np.float32)
+        self._lap = (
+            np.diag(self._adj.sum(axis=1)).astype(np.float32) - self._adj
+        )
+        self._adj_bool = self._adj != 0.0
+        self._coeffs = np.atleast_2d(np.asarray(self.filt.coeffs, np.float64))
+        self._lmax = float(self.filt.lmax)
+        self._tracker = LmaxTracker(self._adj)
+        self._churn = True
+
+    def _apply_topology(self, delta: GraphDelta):
+        """Patch graph/Laplacian/plan/certificate; returns
+        ``(touched, changed_edges, reexpanded)``."""
+        if not self._churn:
+            self._activate_churn()
+        touched, changed = apply_delta_inplace(self._adj, self._lap, delta)
+        if not changed:
+            return touched, changed, False
+        for u, v, _ in changed:
+            nz = self._adj[u, v] != 0.0
+            self._adj_bool[u, v] = self._adj_bool[v, u] = nz
+        self.graph_version += 1
+        reexpanded = False
+        bound = self._tracker.update(self._adj, changed)
+        if bound > self._lmax:
+            # Cheap certificate degraded past the filter domain: tighten —
+            # exact AM first, then power iteration warm-started from the
+            # previous topology's eigvector — and only if the spectrum
+            # genuinely outgrew the domain, re-expand the coefficients.
+            bound = self._tracker.recertify(self._adj)
+            if bound > self._lmax:
+                bound = self._tracker.power_estimate(self._lap)
+            if bound > self._lmax:
+                reexpanded = self._reexpand(bound)
+        if self._plan is not None:
+            self._plan = repair_partition_plan(self._plan, self._adj, touched)
+            self._update_send_counts(touched)
+        return touched, changed, reexpanded
+
+    def _reexpand(self, bound: float) -> bool:
+        """Re-expand coefficients on a larger domain (full-refilter frame)."""
+        if self.filt.multipliers is None:
+            raise RuntimeError(
+                "churn pushed lambda_max past the filter domain "
+                f"({bound:.4g} > {self._lmax:.4g}) and the filter has no "
+                "multiplier bank to re-expand from; build it via "
+                "from_multipliers or with more lmax headroom"
+            )
+        self._lmax = float(self.lmax_headroom * bound)
+        self._coeffs = np.atleast_2d(
+            chebyshev.cheb_coefficients(
+                list(self.filt.multipliers), self.filt.order, self._lmax
+            )
+        )
+        self.reexpansions += 1
+        return True
+
+    def _update_send_counts(self, touched: np.ndarray) -> None:
+        """Incremental ``vertex_send_counts``: a vertex's fan-out depends
+        only on its incident edges and their owners, and plan repair never
+        reassigns owners — so only touched vertices can change."""
+        if self._send_counts is None:
+            return
+        owner = self._owner
+        for v in touched:
+            nbrs = np.nonzero(self._adj_bool[v])[0]
+            self._send_counts[v] = (
+                len(set(owner[nbrs].tolist()) - {owner[v]}) if nbrs.size else 0
+            )
 
     # -- words accounting -------------------------------------------------
 
@@ -179,17 +326,32 @@ class StreamingFilter:
 
     # -- the streaming lane ----------------------------------------------
 
-    def push(self, frame) -> FrameResult:
+    def push(self, frame, *, delta: GraphDelta | None = None) -> FrameResult:
         """Answer one frame, reusing the previous frame's output.
 
+        Args:
+          frame: the (N,) or (N, F) signal frame.
+          delta: optional topology changes since the previous frame
+            (``repro.dynamic.GraphDelta``). The Laplacian/plan/certificate
+            are patched first, then the cached output is corrected — the
+            incremental path when the Krylov stack is live, a full dense
+            refilter otherwise.
+
         Returns a :class:`FrameResult`; ``result.out`` always equals the
-        full ``filt.apply(frame)`` up to float tolerance, whichever path
-        produced it.
+        full apply of ``frame`` on the *current* (post-delta) graph up to
+        float tolerance, whichever path produced it.
         """
         t0 = time.perf_counter()
         y = np.asarray(frame)
         idx = self.frames
         self.frames += 1
+
+        edges_changed = 0
+        touched = changed_edges = None
+        reexpanded = False
+        if delta is not None and len(delta):
+            touched, changed_edges, reexpanded = self._apply_topology(delta)
+            edges_changed = len(changed_edges)
 
         n_changed = y.shape[0]  # reported on the full path (cold: everything)
         force_full = (
@@ -197,9 +359,22 @@ class StreamingFilter:
             or y.shape != self._y.shape
             or (self.refresh_every is not None and idx % self.refresh_every == 0)
         )
+        if edges_changed:
+            self.churn_frames += 1
+            incremental = (
+                not force_full
+                and not reexpanded
+                and self._tk is not None
+                and backend_supports_sparse(self.backend)
+            )
+            if incremental:
+                res = self._churn_frame(y, idx, touched, changed_edges, t0)
+                if res is not None:
+                    return res
+            return self._full_frame(y, idx, n_changed, t0, edges_changed)
         if not force_full:
-            delta = y - self._y
-            changed = np.abs(delta) > self.atol
+            sig_delta = y - self._y
+            changed = np.abs(sig_delta) > self.atol
             if changed.ndim == 2:
                 changed = changed.any(axis=1)
             n_changed = int(changed.sum())
@@ -215,6 +390,17 @@ class StreamingFilter:
                     latency_s=time.perf_counter() - t0,
                 )
             if n_changed <= self.max_delta_frac * y.shape[0]:
+                if self._churn:
+                    # The shared GraphFilter still holds the original
+                    # graph; churn-active streams answer from their own
+                    # patched Laplacian (and keep the Krylov stack
+                    # current so the next topology delta stays cheap).
+                    res = self._churn_signal_delta(
+                        y, idx, sig_delta, changed, n_changed, t0
+                    )
+                    if res is not None:
+                        return res
+                    return self._full_frame(y, idx, n_changed, t0, 0)
                 # The host BFS serves two consumers: the words model
                 # (wanted iff a plan was requested) and the reach mask (a
                 # sparse_input backend restricts with it). When neither
@@ -227,7 +413,7 @@ class StreamingFilter:
                 else:
                     words, reach = 0, None
                 d_out = self.filt.apply_sparse(
-                    jnp.asarray(delta),
+                    jnp.asarray(sig_delta),
                     changed,
                     backend=self.backend,
                     reach=reach,
@@ -249,10 +435,173 @@ class StreamingFilter:
                     words=words,
                     latency_s=time.perf_counter() - t0,
                 )
-            force_full = True
+        return self._full_frame(y, idx, n_changed, t0, edges_changed)
 
-        out = self.filt.apply(jnp.asarray(y), backend=self.backend, **self.opts)
-        self._out = np.asarray(out)
+    # -- churn internals ---------------------------------------------------
+
+    def _sig2d(self, arr: np.ndarray) -> np.ndarray:
+        """(N,) or (N, F) -> (N, F) float32 view for the churn kernels."""
+        a = np.asarray(arr, np.float32)
+        return a[:, None] if a.ndim == 1 else a
+
+    def _restricted_krylov(self, d2d: np.ndarray, reach: np.ndarray, b: int):
+        """Run the Krylov-returning restricted apply on bucket ``b``.
+
+        Returns ``(idx, d_out (eta, k, F), d_stack (M+1, k, F))`` — the
+        caller scatters both into ``_out`` / ``_tk``.
+        """
+        idx = np.nonzero(reach)[0]
+        k = len(idx)
+        lap_sub = np.zeros((b, b), np.float32)
+        lap_sub[:k, :k] = self._lap[np.ix_(idx, idx)]
+        d_sub = np.zeros((b,) + d2d.shape[1:], np.float32)
+        d_sub[:k] = d2d[idx]
+        out, stack = restricted_cheb_apply_krylov(
+            jnp.asarray(lap_sub),
+            jnp.asarray(d_sub),
+            jnp.asarray(self._coeffs, jnp.float32),
+            jnp.float32(self._lmax),
+        )
+        return idx, np.asarray(out)[:, :k], np.asarray(stack)[:, :k]
+
+    def _scatter_out(self, idx: np.ndarray, d_out: np.ndarray) -> None:
+        if self._out.ndim == 2:  # 1-D frames: _out is (eta, N)
+            self._out[:, idx] += d_out[:, :, 0]
+        else:
+            self._out[:, idx] += d_out
+
+    def _churn_frame(
+        self, y, idx, touched, changed_edges, t0
+    ) -> FrameResult | None:
+        """Incremental churn frame: Stage A corrects the cached output for
+        the Laplacian delta (Krylov-difference recurrence on ``N_M(T)``),
+        Stage B filters the signal delta on the NEW Laplacian. Returns
+        None when the combined change set is too large (caller goes full).
+        """
+        n = y.shape[0]
+        sig_delta = y - self._y
+        changed = np.abs(sig_delta) > self.atol
+        if changed.ndim == 2:
+            changed = changed.any(axis=1)
+        n_sig = int(changed.sum())
+        t_mask = np.zeros(n, dtype=bool)
+        t_mask[touched] = True
+        if int((changed | t_mask).sum()) > self.max_delta_frac * n:
+            return None
+        words_a, reach_a = self._walk_delta(t_mask)
+        b_a = bucket_size(int(reach_a.sum()), n)
+        if b_a >= n:
+            return None
+        if n_sig:
+            words_b, reach_b = self._walk_delta(changed)
+            b_b = bucket_size(int(reach_b.sum()), n)
+            if b_b >= n:
+                return None
+        else:
+            words_b, reach_b = 0, None
+
+        # Stage A — topology correction on the previous input. supp(D_k)
+        # stays inside N_{k-1}(T), so the correction is exact on the
+        # induced submatrix over N_M(T) (zero padding is a fixed point).
+        idx_a = np.nonzero(reach_a)[0]
+        k = len(idx_a)
+        lap_sub = np.zeros((b_a, b_a), np.float32)
+        lap_sub[:k, :k] = self._lap[np.ix_(idx_a, idx_a)]
+        pos = np.full(n, -1, dtype=np.int64)
+        pos[idx_a] = np.arange(k)
+        dlap = np.zeros((b_a, b_a), np.float32)
+        for u, v, dw in changed_edges:
+            pu, pv = pos[u], pos[v]
+            dlap[pu, pv] -= dw
+            dlap[pv, pu] -= dw
+            dlap[pu, pu] += dw
+            dlap[pv, pv] += dw
+        tk_sub = np.zeros((self._tk.shape[0], b_a) + self._tk.shape[2:], np.float32)
+        tk_sub[:, :k] = self._tk[:, idx_a]
+        corr, d_stack = churn_correction(
+            jnp.asarray(lap_sub),
+            jnp.asarray(dlap),
+            jnp.asarray(tk_sub),
+            jnp.asarray(self._coeffs, jnp.float32),
+            jnp.float32(self._lmax),
+        )
+        self._scatter_out(idx_a, np.asarray(corr)[:, :k])
+        self._tk[:, idx_a] += np.asarray(d_stack)[:, :k]
+
+        # Stage B — standard signal delta, now against the new Laplacian,
+        # via the Krylov-returning kernel so _tk tracks the new input.
+        if n_sig:
+            idx_b, d_out, d_stack = self._restricted_krylov(
+                self._sig2d(sig_delta), reach_b, b_b
+            )
+            self._scatter_out(idx_b, d_out)
+            self._tk[:, idx_b] += d_stack
+
+        self._y = y.copy()
+        self.delta_frames += 1
+        words = words_a + words_b
+        self.words_total += words
+        active = int((reach_a if reach_b is None else reach_a | reach_b).sum())
+        return FrameResult(
+            out=self._out.copy(),
+            mode="churn",
+            frame=idx,
+            changed=n_sig,
+            active=active,
+            words=words,
+            latency_s=time.perf_counter() - t0,
+            edges_changed=len(changed_edges),
+        )
+
+    def _churn_signal_delta(
+        self, y, idx, sig_delta, changed, n_changed, t0
+    ) -> FrameResult | None:
+        """Signal-only delta frame on a churn-active stream."""
+        if self._tk is None or not backend_supports_sparse(self.backend):
+            return None
+        n = y.shape[0]
+        words, reach = self._walk_delta(changed)
+        b = bucket_size(int(reach.sum()), n)
+        if b >= n:
+            return None
+        idx_b, d_out, d_stack = self._restricted_krylov(
+            self._sig2d(sig_delta), reach, b
+        )
+        self._scatter_out(idx_b, d_out)
+        self._tk[:, idx_b] += d_stack
+        self._y = y.copy()
+        self.delta_frames += 1
+        self.words_total += words
+        return FrameResult(
+            out=self._out.copy(),
+            mode="delta",
+            frame=idx,
+            changed=n_changed,
+            active=int(reach.sum()),
+            words=words,
+            latency_s=time.perf_counter() - t0,
+        )
+
+    def _full_frame(self, y, idx, n_changed, t0, edges_changed=0) -> FrameResult:
+        """Full refilter. Churn-active streams answer from their own
+        patched Laplacian (capturing the Krylov stack for later
+        incremental frames); pristine streams use the shared filter."""
+        if self._churn:
+            y2 = self._sig2d(y)
+            out, tk = dense_cheb_apply_krylov(
+                jnp.asarray(self._lap),
+                jnp.asarray(y2),
+                jnp.asarray(self._coeffs, jnp.float32),
+                jnp.float32(self._lmax),
+            )
+            # np.array (not asarray): jax device buffers can surface as
+            # read-only views, and the churn paths mutate these in place.
+            self._tk = np.array(tk)
+            out = np.array(out)
+            self._out = out[:, :, 0] if y.ndim == 1 else out
+        else:
+            out = self.filt.apply(jnp.asarray(y), backend=self.backend, **self.opts)
+            self._out = np.asarray(out)
         self._y = y.copy()
         self.full_refilters += 1
         words = self._full_words()
@@ -265,4 +614,5 @@ class StreamingFilter:
             active=y.shape[0],
             words=words,
             latency_s=time.perf_counter() - t0,
+            edges_changed=edges_changed,
         )

@@ -1,0 +1,602 @@
+"""Tests for the topology-churn subsystem (repro.dynamic, DESIGN.md Sec. 10).
+
+Coverage layers:
+
+* ``GraphDelta`` canonicalization and the slot-pool vertex join/leave
+  constructors; functional vs in-place delta application.
+* ``LmaxTracker`` — the certified-bound invariant (bound >= lambda_max at
+  all times) across random delta sequences, recertification tightening,
+  and the warm-started power refinement; ``lmax_power_iteration``'s
+  deterministic default / ``v0=`` / ``return_vector`` surface.
+* ``khop_neighborhood`` / ``is_connected`` on graphs with isolated slots
+  (departed sensors).
+* ``repair_partition_plan`` — the PR 6 overlap invariants (boundary-first
+  row split, send lanes inside the sender's boundary block) hold on
+  repaired plans, row slabs reconstruct the true Laplacian, and
+  ``halo_words`` matches a from-scratch rebuild — property-tested over
+  random graphs when ``hypothesis`` is installed, deterministic seeds
+  otherwise; plus end-to-end filter parity through the repaired plan via
+  vmap-as-mesh collectives and (slow) a real 8-device shard_map mesh.
+* ``StreamingFilter`` churn: exactness vs a from-scratch dense refilter on
+  the evolved graph for scenario streams and for explicit edge
+  add/remove/reweight + vertex leave/join deltas; the signal-delta path
+  while churn-active; coefficient re-expansion when lmax degrades; and
+  the steady-state zero-retrace pin for the churn kernels.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chebyshev, graph
+from repro.core.distributed import (
+    build_partition_plan,
+    halo_cheb_apply_overlapped,
+    plan_row_slabs,
+    repair_partition_plan,
+)
+from repro.core.graph import is_connected, khop_neighborhood, lmax_power_iteration
+from repro.dynamic import (
+    GraphDelta,
+    LmaxTracker,
+    apply_delta_inplace,
+    apply_graph_delta,
+    kernel_trace_counts,
+    mobile_sensor_scenario,
+)
+from repro.filters import GraphFilter
+from repro.stream import StreamingFilter
+
+try:
+    import hypothesis
+    from hypothesis import strategies as st
+except ImportError:  # pragma: no cover - dev dep, installed in CI
+    hypothesis = None
+    st = None
+
+REPO = Path(__file__).resolve().parents[1]
+
+needs_hypothesis = pytest.mark.skipif(
+    hypothesis is None, reason="hypothesis not installed"
+)
+
+
+def _random_graph(n: int, seed: int):
+    """Connected weighted random graph + coords (ER edges over a ring)."""
+    rng = np.random.default_rng(seed)
+    a = (rng.uniform(size=(n, n)) < 0.12).astype(np.float64)
+    a = np.triu(a, 1)
+    idx = np.arange(n)
+    a[idx[:-1], idx[1:]] = 1.0
+    a[0, n - 1] = 1.0
+    a = a * rng.uniform(0.5, 1.5, size=a.shape)
+    a = a + a.T
+    coords = rng.uniform(size=(n, 2))
+    return a, coords
+
+
+def _random_delta(a: np.ndarray, rng, k: int = 4) -> GraphDelta:
+    """Mixed remove/reweight/add batch drawn from the current adjacency."""
+    n = a.shape[0]
+    uu, vv = np.nonzero(np.triu(a, 1))
+    edges = []
+    for _ in range(k):
+        kind = rng.integers(3)
+        if kind < 2 and uu.size:  # remove or reweight an existing edge
+            j = rng.integers(uu.size)
+            w = 0.0 if kind == 0 else float(rng.uniform(0.5, 1.5))
+            edges.append((int(uu[j]), int(vv[j]), w))
+        else:  # add a fresh edge
+            u, v = rng.integers(n), rng.integers(n)
+            if u != v:
+                edges.append((int(u), int(v), float(rng.uniform(0.5, 1.5))))
+    return GraphDelta(tuple(edges))
+
+
+# ------------------------------------------------------------ GraphDelta --
+
+
+def test_graph_delta_canonicalization():
+    d = GraphDelta(((3, 1, 0.5), (1, 3, 0.7), (2, 2, 9.0), (4, 0, 0.0)))
+    # self-loop dropped, duplicate pair last-wins, u < v, sorted
+    assert d.edges == ((0, 4, 0.0), (1, 3, 0.7))
+    assert len(d) == 2
+    assert d.touched.tolist() == [0, 1, 3, 4]
+    assert GraphDelta(()).touched.size == 0
+
+
+def test_vertex_leave_and_join_slot_pool():
+    a, coords = _random_graph(20, 0)
+    g = graph.SensorGraph(jnp.asarray(a, jnp.float32), jnp.asarray(coords, jnp.float32))
+    v = 7
+    leave = GraphDelta.vertex_leave(a, v)
+    assert set(leave.touched.tolist()) >= {v}
+    g2 = apply_graph_delta(g, leave)
+    a2 = np.asarray(g2.adjacency)
+    assert a2.shape == a.shape  # slot-pool: shapes never change
+    assert not a2[v].any() and not a2[:, v].any()
+    join = GraphDelta.vertex_join(v, [1, 2, 3], weights=[0.5, 0.6, 0.7])
+    a3 = np.asarray(apply_graph_delta(g2, join).adjacency)
+    assert a3[v, 1] == pytest.approx(0.5)
+    assert a3[3, v] == pytest.approx(0.7)
+
+
+def test_apply_delta_functional_vs_inplace():
+    a, coords = _random_graph(40, 1)
+    a = a.astype(np.float32)
+    g = graph.SensorGraph(jnp.asarray(a), jnp.asarray(coords, jnp.float32))
+    uu, vv = np.nonzero(np.triu(a, 1))
+    u0, v0 = int(uu[0]), int(vv[0])
+    d = GraphDelta((
+        (u0, v0, 0.0),                       # remove
+        (int(uu[1]), int(vv[1]), 2.0),       # reweight
+        (0, a.shape[0] - 2, 1.25),           # add (ring graph: not adjacent)
+        (int(uu[2]), int(vv[2]), float(a[uu[2], vv[2]])),  # no-op
+    ))
+    want = np.asarray(apply_graph_delta(g, d).adjacency)
+    adj = a.copy()
+    lap = np.diag(adj.sum(axis=1)) - adj
+    touched, changed = apply_delta_inplace(adj, lap, d)
+    assert np.array_equal(adj, want)
+    np.testing.assert_allclose(lap, np.diag(adj.sum(axis=1)) - adj, atol=1e-5)
+    # the no-op entry's endpoints are dropped from T
+    assert len(changed) == 3
+    changed_pairs = {(u, v) for u, v, _ in changed}
+    assert (int(uu[2]), int(vv[2])) not in changed_pairs
+    dw = dict(((u, v), w) for u, v, w in changed)
+    assert dw[(u0, v0)] == pytest.approx(-float(a[u0, v0]))
+    assert set(touched.tolist()) == {x for uv in changed_pairs for x in uv}
+
+
+# ------------------------------------------------------------ LmaxTracker --
+
+
+def test_lmax_tracker_certified_invariant():
+    a, _ = _random_graph(60, 2)
+    tracker = LmaxTracker(a)
+    rng = np.random.default_rng(3)
+    adj = a.copy()
+    prev_bound = tracker.bound
+    for _ in range(6):
+        d = _random_delta(adj, rng)
+        _, changed = apply_delta_inplace(adj, None, d)
+        b = tracker.update(adj, changed)
+        lam = float(np.linalg.eigvalsh(np.diag(adj.sum(axis=1)) - adj).max())
+        assert b >= lam  # certified at all times
+        assert b >= prev_bound  # cheap path is monotone
+        prev_bound = b
+    # recertify drops accumulated slack but stays certified
+    lam = float(np.linalg.eigvalsh(np.diag(adj.sum(axis=1)) - adj).max())
+    b_exact = tracker.recertify(adj)
+    assert lam <= b_exact <= prev_bound
+    assert tracker.recertifications == 1
+    # the power refinement tightens past AM and stays (numerically) sharp
+    lap = np.diag(adj.sum(axis=1)) - adj
+    b_pow = tracker.power_estimate(lap, iters=200)
+    assert b_pow <= b_exact
+    assert b_pow >= 0.999 * lam
+    assert tracker._v is not None  # warm-start iterate retained
+
+
+def test_lmax_power_iteration_surface():
+    a, _ = _random_graph(50, 4)
+    lap = jnp.asarray(np.diag(a.sum(axis=1)) - a, jnp.float32)
+    lam = float(np.linalg.eigvalsh(np.asarray(lap, np.float64)).max())
+    # deterministic default: same seed -> bit-identical estimate
+    e1 = float(lmax_power_iteration(lap, 60))
+    e2 = float(lmax_power_iteration(lap, 60))
+    assert e1 == e2
+    assert 0.99 * lam <= e1 <= 1.05 * lam
+    est, v = lmax_power_iteration(lap, 60, return_vector=True)
+    assert v.shape == (lap.shape[0],)
+    # warm start from the converged iterate: few iterations suffice
+    e_warm = float(lmax_power_iteration(lap, 3, v0=v))
+    assert abs(e_warm - float(est)) < 1e-3 * lam
+    # a different seed still converges to the same place
+    e3 = float(lmax_power_iteration(lap, 200, seed=5))
+    assert abs(e3 - e1) < 5e-3 * lam
+
+
+# --------------------------------------- khop / connectivity with churn --
+
+
+def test_khop_neighborhood_with_isolated_vertices():
+    a, coords = _random_graph(30, 5)
+    v = 11
+    adj = a.copy()
+    apply_delta_inplace(adj, None, GraphDelta.vertex_leave(a, v))
+    # an isolated slot is unreachable from everywhere else...
+    others = np.ones(30, dtype=bool)
+    others[v] = False
+    assert not khop_neighborhood(adj, others, 30)[v]
+    # ...and its own k-hop neighborhood is just itself (index-array form)
+    mask = khop_neighborhood(adj, np.asarray([v]), 3)
+    assert mask[v] and mask.sum() == 1
+    # k=0 is the support itself
+    assert khop_neighborhood(adj, np.asarray([0]), 0).sum() == 1
+
+
+def test_is_connected_ignore_isolated():
+    a, _ = _random_graph(30, 6)
+    assert is_connected(a)
+    assert is_connected(a, ignore_isolated=True)
+    adj = a.copy()
+    apply_delta_inplace(adj, None, GraphDelta.vertex_leave(a, 0))
+    assert not is_connected(adj)  # slot 0 is isolated
+    assert is_connected(adj, ignore_isolated=True)  # fleet still connected
+    # no edges at all: vacuously connected in slot-pool mode only
+    empty = np.zeros((5, 5))
+    assert not is_connected(empty)
+    assert is_connected(empty, ignore_isolated=True)
+
+
+# -------------------------------------------------------- plan repair ----
+
+
+def _check_repaired_plan(plan, a):
+    """PR 6 overlap invariants + exact row reconstruction, plan-taking."""
+    n, n_local = plan.n, plan.n_local
+    n_pad = n_local * plan.n_parts
+    lap_full = np.diag(np.asarray(a).sum(axis=1)) - np.asarray(a)
+    lap = np.zeros((n_pad, n_pad))
+    lap[:n, :n] = lap_full[np.ix_(plan.order, plan.order)]
+    counts = np.asarray(plan.boundary_counts)
+    l_halo = np.asarray(plan.l_halo)
+    send_idx = np.asarray(plan.send_idx)
+    max_halo = send_idx.shape[-1]
+
+    assert sorted(plan.order.tolist()) == list(range(n))
+    # repair may keep a larger n_boundary than strictly needed (shape
+    # stability across frames) but never a smaller one
+    assert plan.n_boundary >= max(1, counts.max())
+
+    for p in range(plan.n_parts):
+        sl = slice(p * n_local, (p + 1) * n_local)
+        off = np.ones(n_pad, dtype=bool)
+        off[sl] = False
+        is_boundary = np.any(lap[sl][:, off] != 0.0, axis=1)
+        cnt = int(counts[p])
+        assert is_boundary[:cnt].all(), (p, cnt)
+        assert not is_boundary[cnt:].any(), (p, cnt)
+
+    for p in range(plan.n_parts):
+        for q in range(plan.n_parts):
+            if q == p:
+                continue
+            cols = l_halo[p][:, q * max_halo : (q + 1) * max_halo]
+            used = np.any(cols != 0.0, axis=0)
+            sent = send_idx[q, p][used]
+            assert np.all(sent < counts[q]), (p, q, sent, counts[q])
+            if plan.pair_counts is not None:
+                assert int(used.sum()) <= int(plan.pair_counts[p, q])
+
+    # the repaired tables reconstruct the true Laplacian rows exactly
+    rows = np.asarray(plan_row_slabs(plan))
+    want = lap.reshape(plan.n_parts, n_local, n_pad)
+    assert np.max(np.abs(rows - want)) < 2e-6
+
+
+@pytest.mark.parametrize("n,n_parts,seed", [(48, 2, 0), (90, 4, 1), (120, 8, 2)])
+def test_repair_sequential_deltas(n, n_parts, seed):
+    a, coords = _random_graph(n, seed)
+    a = a.astype(np.float32).astype(np.float64)
+    plan = build_partition_plan(a, coords, n_parts)
+    rng = np.random.default_rng(seed + 100)
+    repaired = 0
+    for _ in range(6):
+        d = _random_delta(a, rng)
+        touched, changed = apply_delta_inplace(a, None, d)
+        if touched.size == 0:
+            continue
+        plan = repair_partition_plan(plan, a, touched)
+        repaired += 1
+        _check_repaired_plan(plan, a)
+        fresh = build_partition_plan(a, coords, n_parts)
+        assert plan.halo_words == fresh.halo_words
+        if plan.pair_counts is not None:
+            assert int(np.asarray(plan.pair_counts).sum()) == plan.halo_words
+    assert repaired >= 4
+
+
+def test_repair_empty_touched_is_identity():
+    a, coords = _random_graph(40, 9)
+    plan = build_partition_plan(a, coords, 4)
+    assert repair_partition_plan(plan, a, np.zeros(0, np.int64)) is plan
+
+
+@needs_hypothesis
+def test_repair_invariants_random():
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(
+        n=st.integers(24, 80),
+        n_parts=st.sampled_from([2, 3, 4]),
+        seed=st.integers(0, 2**30),
+    )
+    def run(n, n_parts, seed):
+        a, coords = _random_graph(n, seed)
+        plan = build_partition_plan(a, coords, n_parts)
+        rng = np.random.default_rng(seed)
+        for _ in range(3):
+            d = _random_delta(a, rng)
+            touched, _ = apply_delta_inplace(a, None, d)
+            if touched.size == 0:
+                continue
+            plan = repair_partition_plan(plan, a, touched)
+            _check_repaired_plan(plan, a)
+            assert plan.halo_words == build_partition_plan(a, coords, n_parts).halo_words
+
+    run()
+
+
+def _overlapped_via_vmap(plan, coeffs, lmax, f):
+    """Run the overlapped halo schedule with vmap-as-mesh collectives."""
+    n_pad = plan.n_local * plan.n_parts
+    fp = np.zeros((n_pad,) + f.shape[1:], f.dtype)
+    fp[: plan.n] = f[plan.order]
+    f_parts = jnp.asarray(fp.reshape((plan.n_parts, plan.n_local) + f.shape[1:]))
+    fn = jax.vmap(
+        lambda fl, lo, lh, si: halo_cheb_apply_overlapped(
+            fl, coeffs, lmax, lo, lh, si,
+            n_boundary=plan.n_boundary, axis_name="parts"),
+        axis_name="parts",
+    )
+    out = fn(f_parts, plan.l_own, plan.l_halo, plan.send_idx)
+    out = np.moveaxis(np.asarray(out), 0, 1)
+    out = out.reshape((out.shape[0], n_pad) + f.shape[1:])
+    inv = np.empty(plan.n, dtype=np.int64)
+    inv[plan.order] = np.arange(plan.n)
+    return out[:, inv]
+
+
+def test_repaired_plan_end_to_end_filter_parity():
+    """The repaired plan runs the unchanged overlapped schedule (exactly M
+    exchanges) and matches the dense oracle on the evolved graph."""
+    n, n_parts, order = 90, 4, 12
+    a, coords = _random_graph(n, 20)
+    plan = build_partition_plan(a, coords, n_parts)
+    rng = np.random.default_rng(21)
+    for _ in range(4):
+        d = _random_delta(a, rng, k=5)
+        touched, _ = apply_delta_inplace(a, None, d)
+        if touched.size:
+            plan = repair_partition_plan(plan, a, touched)
+    lap = np.diag(a.sum(axis=1)) - a
+    lmax = float(np.linalg.eigvalsh(lap).max()) * 1.01
+    coeffs = jnp.asarray(
+        chebyshev.cheb_coefficients(
+            [lambda x: np.exp(-x), lambda x: x / (1.0 + x)], order, lmax),
+        jnp.float32)
+    f = rng.normal(size=(n, 3)).astype(np.float32)
+    got = _overlapped_via_vmap(plan, coeffs, lmax, f)
+    want = np.asarray(chebyshev.cheb_apply_dense(
+        jnp.asarray(lap, jnp.float32), jnp.asarray(f), coeffs, lmax))
+    assert np.max(np.abs(got - want)) < 1e-5
+
+
+# ------------------------------------------------------ streaming churn --
+
+
+def _churn_oracle(lane, filt, cur_graph, signal):
+    """From-scratch dense refilter with the lane's own certified state."""
+    c = lane._coeffs if lane._coeffs is not None else np.atleast_2d(np.asarray(filt.coeffs))
+    lm = lane._lmax if lane._lmax is not None else filt.lmax
+    return np.asarray(chebyshev.cheb_apply_dense(
+        cur_graph.laplacian(), signal, np.asarray(c, np.float32), lm))
+
+
+def _run_scenario_parity(sc, order=6, tol=1e-5, **filt_kw):
+    g = sc.graph0
+    filt = GraphFilter.from_multipliers(
+        [lambda x: 1.0 / (1.0 + x), lambda x: np.exp(-0.5 * x)],
+        order, graph=g, lmax=filt_kw.pop("lmax", 1.5 * float(g.lmax_bound())))
+    lane = StreamingFilter(filt, backend="dense", max_delta_frac=0.9)
+    cur = g
+    modes = []
+    for fr in sc.frames:
+        res = lane.push(fr.signal, delta=fr.delta)
+        modes.append(res.mode)
+        if fr.delta is not None:
+            cur = apply_graph_delta(cur, fr.delta)
+        err = float(np.max(np.abs(lane._out - _churn_oracle(lane, filt, cur, fr.signal))))
+        assert err < tol, (fr.edges_changed, res.mode, err)
+    # the shared filter was never mutated
+    np.testing.assert_array_equal(
+        np.asarray(filt.graph.adjacency), np.asarray(g.adjacency))
+    return lane, modes
+
+
+def test_streaming_churn_parity_waypoint():
+    sc = mobile_sensor_scenario(96, 7, mobility="waypoint", seed=1)
+    lane, _ = _run_scenario_parity(sc)
+    assert lane.graph_version > 0
+    assert lane.churn_frames > 0
+
+
+def test_streaming_churn_parity_convoy_incremental():
+    """At medium scale the incremental churn path must actually engage
+    (mode == "churn") and stay exact."""
+    sc = mobile_sensor_scenario(
+        500, 8, mobility="convoy", seed=7,
+        cluster_radius=0.08, speed=0.02, birth_rate=0.3, death_rate=0.3,
+        bump_radius=0.15)
+    lane, modes = _run_scenario_parity(sc)
+    assert "churn" in modes, modes
+    assert lane.reexpansions == 0  # 1.5x headroom holds across the run
+
+
+def test_streaming_churn_explicit_delta_kinds():
+    """Edge add / remove / reweight and vertex leave / join, one per
+    frame, all exact vs the from-scratch rebuild."""
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(2), n=80,
+                                     kappa=0.3, sigma=0.25)
+    filt = GraphFilter.from_multipliers(
+        [lambda x: np.exp(-x)], 6, graph=g, lmax=1.5 * float(g.lmax_bound()))
+    lane = StreamingFilter(filt, backend="dense", max_delta_frac=0.9)
+    rng = np.random.default_rng(3)
+    a = np.array(np.asarray(g.adjacency, np.float32))
+    uu, vv = np.nonzero(np.triu(a, 1))
+    deltas = [
+        None,
+        GraphDelta(((int(uu[0]), int(vv[0]), 0.0),)),            # remove
+        GraphDelta(((int(uu[1]), int(vv[1]), 2.0),)),            # reweight
+        GraphDelta(((0, 40, 0.8),)) if a[0, 40] == 0 else GraphDelta(((0, 40, 0.8),)),
+        GraphDelta.vertex_leave(a, int(vv[2])),                  # leave
+    ]
+    cur = g
+    for d in deltas:
+        if d is not None:
+            cur = apply_graph_delta(cur, d)
+        y = rng.normal(size=80).astype(np.float32)
+        lane.push(y, delta=d)
+        err = float(np.max(np.abs(lane._out - _churn_oracle(lane, filt, cur, y))))
+        assert err < 1e-5, (d, err)
+    # join the departed vertex back in
+    d = GraphDelta.vertex_join(int(vv[2]), [int(uu[2]), 5], weights=0.7)
+    cur = apply_graph_delta(cur, d)
+    y = rng.normal(size=80).astype(np.float32)
+    lane.push(y, delta=d)
+    err = float(np.max(np.abs(lane._out - _churn_oracle(lane, filt, cur, y))))
+    assert err < 1e-5
+    assert lane.graph_version == 5
+
+
+def test_streaming_signal_delta_while_churn_active():
+    """A signal-only sparse frame after topology churn takes the delta
+    path (restricted kernels against the *current* Laplacian)."""
+    g = graph.grid_graph(24)  # locality is real on the grid: N_6 << N
+    n = g.n_vertices
+    filt = GraphFilter.from_multipliers(
+        [lambda x: 1.0 / (1.0 + x)], 6, graph=g, lmax=1.5 * float(g.lmax_bound()))
+    lane = StreamingFilter(filt, backend="dense", max_delta_frac=0.9)
+    rng = np.random.default_rng(5)
+    y0 = rng.normal(size=n).astype(np.float32)
+    lane.push(y0)
+    a = np.array(np.asarray(g.adjacency, np.float32))
+    uu, vv = np.nonzero(np.triu(a, 1))
+    d = GraphDelta(((int(uu[0]), int(vv[0]), 0.0),))
+    cur = apply_graph_delta(g, d)
+    lane.push(y0, delta=d)
+    assert lane._churn
+    y1 = y0.copy()
+    y1[n // 2] += 1.0  # sparse signal-only change
+    res = lane.push(y1)
+    assert res.mode == "delta"
+    err = float(np.max(np.abs(lane._out - _churn_oracle(lane, filt, cur, y1))))
+    assert err < 1e-5
+    assert res.words < lane._full_words() if lane._plan is not None else True
+
+
+def test_streaming_churn_reexpansion_on_lmax_growth():
+    """A heavy added edge pushes the certified bound past the filter's
+    domain: the lane recertifies, then re-expands its coefficients from
+    the multiplier bank — and stays exact with the new domain."""
+    g = graph.connected_sensor_graph(jax.random.PRNGKey(6), n=80,
+                                     kappa=0.3, sigma=0.25)
+    # no headroom: lmax pinned at the exact AM bound
+    filt = GraphFilter.from_multipliers(
+        [lambda x: np.exp(-x)], 6, graph=g, lmax=float(g.lmax_bound()))
+    lane = StreamingFilter(filt, backend="dense", max_delta_frac=0.9)
+    rng = np.random.default_rng(7)
+    y = rng.normal(size=80).astype(np.float32)
+    lane.push(y)
+    d = GraphDelta(((0, 1, 50.0),))  # degree spike: AM bound jumps
+    cur = apply_graph_delta(g, d)
+    lane.push(y, delta=d)
+    assert lane.reexpansions == 1
+    assert lane.recertifications >= 1
+    assert lane._lmax > filt.lmax
+    err = float(np.max(np.abs(lane._out - _churn_oracle(lane, filt, cur, y))))
+    assert err < 1e-5
+
+
+def test_churn_kernels_zero_steady_state_retraces():
+    """Replaying a whole scenario through a fresh lane after a warm run
+    adds zero kernel traces: every bucket shape is already compiled (the
+    PR 7 cache-pin mechanism, extended to the churn kernels)."""
+    sc = mobile_sensor_scenario(
+        256, 6, mobility="convoy", seed=9,
+        cluster_radius=0.1, speed=0.02, birth_rate=0.3, death_rate=0.3,
+        bump_radius=0.15)
+
+    def run_once():
+        g = sc.graph0
+        filt = GraphFilter.from_multipliers(
+            [lambda x: 1.0 / (1.0 + x)], 6, graph=g,
+            lmax=1.5 * float(g.lmax_bound()))
+        lane = StreamingFilter(filt, backend="dense", max_delta_frac=0.9)
+        for fr in sc.frames:
+            lane.push(fr.signal, delta=fr.delta)
+
+    run_once()  # warm: compile every bucket this scenario ever hits
+    snap = kernel_trace_counts()
+    run_once()
+    after = kernel_trace_counts()
+    assert after == snap, (snap, after)
+
+
+SUBPROCESS_REPAIR = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import chebyshev, compat
+from repro.core.distributed import (DistributedGraphContext,
+                                    build_partition_plan,
+                                    repair_partition_plan)
+from repro.dynamic import apply_delta_inplace, GraphDelta
+
+rng = np.random.default_rng(0)
+n = 200
+a = (rng.uniform(size=(n, n)) < 0.1).astype(np.float64)
+a = np.triu(a, 1)
+idx = np.arange(n)
+a[idx[:-1], idx[1:]] = 1.0
+a = (a * rng.uniform(0.5, 1.5, size=a.shape))
+a = a + a.T
+coords = rng.uniform(size=(n, 2))
+plan = build_partition_plan(a, coords, 8)
+
+# churn: a few mixed deltas, repairing the plan each time
+for step in range(3):
+    uu, vv = np.nonzero(np.triu(a, 1))
+    j = rng.integers(uu.size, size=3)
+    edges = [(int(uu[j[0]]), int(vv[j[0]]), 0.0),
+             (int(uu[j[1]]), int(vv[j[1]]), 2.0),
+             (int(rng.integers(n)), int(rng.integers(n)), 1.1)]
+    touched, _ = apply_delta_inplace(a, None, GraphDelta(tuple(edges)))
+    if touched.size:
+        plan = repair_partition_plan(plan, a, touched)
+
+lap = np.diag(a.sum(axis=1)) - a
+lmax = float(np.linalg.eigvalsh(lap).max()) * 1.01
+coeffs = jnp.asarray(chebyshev.cheb_coefficients(
+    [lambda x: np.exp(-x), lambda x: x / (1.0 + x)], 16, lmax), jnp.float32)
+f = rng.normal(size=(n, 4)).astype(np.float32)
+
+mesh = compat.make_mesh((8,), ("parts",))
+ctx = DistributedGraphContext(plan, mesh, "parts")
+fs = ctx.scatter_signal(f)
+for overlap in (True, False):
+    out = ctx.gather_signal(np.asarray(ctx.cheb_apply(
+        fs, coeffs, lmax, backend="halo", overlap=overlap)))
+    want = np.asarray(chebyshev.cheb_apply_dense(
+        jnp.asarray(lap, jnp.float32), jnp.asarray(f), coeffs, lmax))
+    err = np.max(np.abs(out - want[..., None] if out.ndim > want.ndim else out - want))
+    assert err < 1e-5, (overlap, err)
+    print("overlap", overlap, "err", err)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_repaired_plan_halo_parity_8_devices():
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    proc = subprocess.run(
+        [sys.executable, "-c", SUBPROCESS_REPAIR],
+        capture_output=True, text=True, env=env, timeout=900)
+    assert proc.returncode == 0, f"{proc.stdout}\n{proc.stderr}"
+    assert "OK" in proc.stdout

@@ -252,6 +252,95 @@ def test_async_solve_without_solver_raises(setting):
         eng.submit_solve(sigs[0], now=0.0)
 
 
+# ------------------------------------------- stream eviction / churn ----
+
+
+def _frame_engine(filt, **kw):
+    return AsyncGraphFilterEngine(
+        filt, backend="dense",
+        config=SchedulerConfig(max_panel=8, min_bucket=4,
+                               latency_budget_s=0.05),
+        stream_opts={"max_delta_frac": 1.0}, **kw)
+
+
+def test_async_stream_eviction_lru_cap(setting):
+    """Past max_streams the coldest lanes are dropped in LRU order; a
+    touched stream survives streams that were used less recently."""
+    _, filt, sigs = setting
+    eng = _frame_engine(filt, max_streams=3)
+    for i in range(5):
+        eng.wait(eng.submit_frame(f"s{i}", sigs[i], now=float(i)),
+                 now=float(i))
+    assert set(eng._streams) == {"s2", "s3", "s4"}
+    assert eng.streams_evicted == 2
+    # touching s2 makes s3 the coldest: the next new stream evicts s3
+    eng.wait(eng.submit_frame("s2", sigs[5], now=5.0), now=5.0)
+    eng.wait(eng.submit_frame("s9", sigs[6], now=6.0), now=6.0)
+    assert set(eng._streams) == {"s4", "s2", "s9"}
+    assert eng.streams_evicted == 3
+    # an evicted stream recovers cold: full mode again, correct output
+    tk = eng.submit_frame("s3", sigs[7], now=7.0)
+    res = eng.wait(tk, now=7.0)
+    assert res.mode == "full"
+    np.testing.assert_allclose(res.out, _solo_apply(filt, sigs[7]),
+                               atol=1e-5)
+
+
+def test_async_stream_eviction_ttl_virtual_clock(setting):
+    """TTL eviction runs on the engine's (virtual) timeline."""
+    _, filt, sigs = setting
+    eng = _frame_engine(filt, max_streams=None, stream_ttl_s=10.0)
+    eng.wait(eng.submit_frame("a", sigs[0], now=0.0), now=0.0)
+    eng.wait(eng.submit_frame("b", sigs[1], now=8.0), now=8.0)
+    assert set(eng._streams) == {"a", "b"}  # both inside the TTL
+    eng.wait(eng.submit_frame("b", sigs[2], now=15.0), now=15.0)
+    assert set(eng._streams) == {"b"}  # "a" idled out at now=15
+    assert eng.streams_evicted == 1
+    st = eng.stats()
+    assert st["streams"] == 1 and st["streams_evicted"] == 1
+
+
+def test_async_stream_no_eviction_by_default_within_cap(setting):
+    _, filt, sigs = setting
+    eng = _frame_engine(filt)  # defaults: cap 4096, no TTL
+    for i in range(8):
+        eng.wait(eng.submit_frame(f"s{i}", sigs[i], now=float(i)),
+                 now=float(i))
+    assert eng.streams_evicted == 0 and len(eng._streams) == 8
+
+
+def test_async_frame_lane_survives_churn(setting):
+    """submit_frame(delta=) mutates only the per-stream lane: the shared
+    GraphFilter is untouched, other streams are unaffected, and the
+    churned stream matches a reference StreamingFilter fed the same
+    deltas."""
+    from repro.dynamic import GraphDelta
+
+    g, filt, sigs = setting
+    eng = _frame_engine(filt, stream_ttl_s=None)
+    adj0 = np.array(np.asarray(filt.graph.adjacency))
+    uu, vv = np.nonzero(np.triu(adj0, 1))
+    d = GraphDelta(((int(uu[0]), int(vv[0]), 0.0),
+                    (int(uu[1]), int(vv[1]), 2.0)))
+
+    ref = StreamingFilter(filt, backend="dense", max_delta_frac=1.0)
+    eng.wait(eng.submit_frame("churny", sigs[0], now=0.0), now=0.0)
+    ref.push(np.asarray(sigs[0]))
+    res = eng.wait(eng.submit_frame("churny", sigs[1], delta=d, now=1.0),
+                   now=1.0)
+    want = ref.push(np.asarray(sigs[1]), delta=d)
+    np.testing.assert_allclose(res.out, want.out, atol=1e-5)
+    assert res.edges_changed == 2
+    assert eng._streams["churny"].graph_version == 1
+    # the shared filter still describes the original graph...
+    np.testing.assert_array_equal(np.asarray(filt.graph.adjacency), adj0)
+    # ...and a different stream on the same engine is churn-free
+    res2 = eng.wait(eng.submit_frame("other", sigs[2], now=2.0), now=2.0)
+    np.testing.assert_allclose(res2.out, _solo_apply(filt, sigs[2]),
+                               atol=1e-5)
+    assert eng._streams["other"].graph_version == 0
+
+
 # -------------------------------------------- solver-backend binding ----
 
 

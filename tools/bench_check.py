@@ -157,18 +157,21 @@ def main() -> int:
     baseline = load_rows(baseline_path)
     fresh = load_rows(fresh_path)
     # Key rows: timings above the noise floor, plus every engine_* serving
-    # row — the engine rows are the north-star throughput/latency claim, so
-    # their *existence* is always enforced; their ratio is only gated when
-    # the baseline timing clears the floor (sub-floor medians are noise at
-    # CI-runner resolution, same as everywhere else).
+    # row and every churn_* row — those carry the north-star throughput /
+    # churn-acceptance claims, so their *existence* is always enforced;
+    # their ratio is only gated when the baseline timing clears the floor
+    # (sub-floor medians are noise at CI-runner resolution, same as
+    # everywhere else).
     key_rows = {
         k: r
         for k, r in baseline.items()
-        if r["median_ms"] >= args.min_ms or k[1].startswith("engine_")
+        if r["median_ms"] >= args.min_ms
+        or k[1].startswith("engine_")
+        or k[1].startswith("churn_")
     }
     print(
         f"perf gate: {len(key_rows)} key rows (baseline >= {args.min_ms} ms "
-        f"or engine_*) of {len(baseline)} baseline rows; "
+        f"or engine_*/churn_*) of {len(baseline)} baseline rows; "
         f"threshold {args.threshold:.2f}x"
     )
 

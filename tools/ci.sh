@@ -31,8 +31,8 @@ python -m pip install -r requirements-dev.txt
 # `ruff format --check` is a ratchet: it covers the paths below (new
 # subsystems land formatted); extend FORMAT_PATHS as older files get
 # reformatted rather than formatting the whole tree in one noise commit.
-FORMAT_PATHS=(src/repro/stream src/repro/serve benchmarks/loadgen.py
-              tools/bench_check.py)
+FORMAT_PATHS=(src/repro/stream src/repro/serve src/repro/dynamic
+              benchmarks/loadgen.py tools/bench_check.py)
 if python -m ruff --version >/dev/null 2>&1; then
   python -m ruff check .
   python -m ruff format --check "${FORMAT_PATHS[@]}"
@@ -58,6 +58,34 @@ case "$LANE" in
     # to end on a small trace (full-size runs live in the perf-gate job).
     PYTHONPATH=src python -m benchmarks.loadgen --streams 200 --seconds 2 \
       --rate 200
+    # Churn smoke: a small mobile-sensor scenario streamed with per-frame
+    # GraphDeltas must stay exact vs a from-scratch dense refilter on the
+    # evolved graph (full-scale numbers live in tab_churn / the perf gate).
+    PYTHONPATH=src python - <<'PY'
+import numpy as np
+from repro.core.chebyshev import cheb_apply_dense
+from repro.dynamic import apply_graph_delta, mobile_sensor_scenario
+from repro.filters import GraphFilter
+from repro.stream import StreamingFilter
+
+sc = mobile_sensor_scenario(96, 6, mobility="convoy", seed=3)
+g = sc.graph0
+filt = GraphFilter.from_multipliers(
+    [lambda x: 1.0 / (1.0 + x)], 8, graph=g, lmax=1.5 * float(g.lmax_bound()))
+lane = StreamingFilter(filt, backend="dense", max_delta_frac=0.9)
+cur = g
+for fr in sc.frames:
+    res = lane.push(fr.signal, delta=fr.delta)
+    if fr.delta is not None:
+        cur = apply_graph_delta(cur, fr.delta)
+    c = lane._coeffs if lane._coeffs is not None else np.atleast_2d(np.asarray(filt.coeffs))
+    lm = lane._lmax if lane._lmax is not None else filt.lmax
+    ref = np.asarray(cheb_apply_dense(
+        cur.laplacian(), fr.signal, np.asarray(c, np.float32), lm))
+    err = float(np.max(np.abs(lane._out - ref)))
+    assert err < 1e-5, (fr.edges_changed, res.mode, err)
+print("churn smoke OK:", len(sc.frames), "frames, graph_version", lane.graph_version)
+PY
     ;;
   full)
     python -m pytest -x -q "${TIMEOUT_ARGS[@]}"
