@@ -42,13 +42,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.apps import denoise_tikhonov, wavelet_denoise_ista
-from repro.core import chebyshev, gossip, graph, multipliers, operators
+from repro.apps import wavelet_denoise_ista
+from repro.core import chebyshev, gossip, graph, multipliers
 from repro.core.distributed import DistributedGraphContext, build_partition_plan
 from repro.filters import GraphFilter, get_backend
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
-from repro.solvers import GramProblem, LassoProblem, conjugate_gradient, fista, ista
+from repro.solvers import (
+    GramProblem,
+    LassoProblem,
+    cheb_inverse,
+    cheb_preconditioner,
+    conjugate_gradient,
+    fista,
+    ista,
+)
 from repro.stream import StreamingFilter, StreamingWiener
 
 ROWS: list[tuple[str, float, str]] = []
@@ -123,12 +131,10 @@ def tab_denoising(full: bool) -> None:
         g = graph.connected_sensor_graph(kg, n=500)
         f0 = g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2 - 1.0
         y = f0 + 0.5 * jax.random.normal(kn, f0.shape)
-        lap = g.laplacian()
         lmax = float(g.lmax_bound())
-        op = operators.UnionFilterOperator.from_multipliers(
-            [lambda x, lm=lmax: multipliers.tikhonov(1.0, 1)(x)],
-            20, lmax)
-        fhat = op.apply_dense(lap, y)[0]
+        op = GraphFilter.from_multipliers(
+            [multipliers.tikhonov(1.0, 1)], 20, graph=g, lmax=lmax)
+        fhat = op.apply(y, backend="dense")[0]
         noisy_mse.append(float(jnp.mean((y - f0) ** 2)))
         den_mse.append(float(jnp.mean((fhat - f0) ** 2)))
     us = (time.perf_counter() - t0) / trials * 1e6
@@ -166,13 +172,12 @@ def tab_wavelet_ista(full: bool) -> None:
     g = graph.connected_sensor_graph(kg, n=500)
     f0 = g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2 - 1.0
     y = f0 + 0.5 * jax.random.normal(kn, f0.shape)
-    lap = g.laplacian()
     lmax = float(g.lmax_bound())
     n_scales, order, iters = 4, 20, 40
 
     t0 = time.perf_counter()
     fhat, a = wavelet_denoise_ista(
-        lambda v: lap @ v, y, lmax, n_scales=n_scales, order=order,
+        g, y, lmax, n_scales=n_scales, order=order,
         mu=2.0, n_iters=iters)
     us = (time.perf_counter() - t0) * 1e6
     # Sec. V-C communication model per ISTA iteration:
@@ -430,6 +435,51 @@ def tab_solvers(full: bool) -> None:
         f";words_per_iter_halo={cg_words['halo']}",
         backend="dense", shape=shape,
         messages=cg_words["halo"] * res_cg.iterations)
+
+    # Chebyshev-preconditioned CG (DESIGN.md Sec. 11.3): the fit
+    # q(L) ~= 1/(h + reg) is built once from gram_coeffs, each PCG
+    # iteration pays K extra matvecs, and the acceptance bits are
+    # pcg_halves (iterations <= 0.5x plain CG) and fewer_total_words —
+    # solver_precond_* rows are bench_check key rows.
+    pre = cheb_preconditioner(gram_problem, order=32)
+    conjugate_gradient(gram_problem, n_iters=budget, tol=1e-6,
+                       preconditioner=pre)  # warm
+    t0 = time.perf_counter()
+    res_pcg = conjugate_gradient(gram_problem, n_iters=budget, tol=1e-6,
+                                 preconditioner=pre)
+    us_p = (time.perf_counter() - t0) * 1e6
+    k_pre = pre.orders[0]
+    pcg_per_iter = cg_words["halo"] + k_pre * plan.halo_words
+    total_pcg = pcg_per_iter * res_pcg.iterations
+    total_cg = cg_words["halo"] * res_cg.iterations
+    row("solver_precond_pcg", us_p,
+        f"iters_to_tol={res_pcg.iterations};tol=1e-6"
+        f";plain_cg_iters={res_cg.iterations}"
+        f";pcg_halves={int(res_pcg.iterations <= res_cg.iterations // 2)}"
+        f";fit_order={k_pre};fit_rate={pre.rate:.4f}"
+        f";words_per_iter_halo={pcg_per_iter}"
+        f";total_words_halo={total_pcg};plain_total_words={total_cg}"
+        f";fewer_total_words={int(total_pcg < total_cg)}"
+        f";converged={int(res_pcg.converged)}",
+        backend="dense", shape=shape, messages=total_pcg)
+
+    # Standalone fixed-point inverse: rate known at build time, no
+    # inner-product reductions (pure filter applies per sweep).
+    res_fp = cheb_inverse(gram_problem, order=16, n_iters=budget, tol=1e-6)
+    t0 = time.perf_counter()
+    res_fp = cheb_inverse(gram_problem, order=16, n_iters=budget, tol=1e-6)
+    us_f = (time.perf_counter() - t0) * 1e6
+    k_fp = res_fp.aux.orders[0]
+    fp_per_iter = cg_words["halo"] + k_fp * plan.halo_words
+    row("solver_precond_cheb_inverse", us_f,
+        f"iters_to_tol={res_fp.iterations};tol=1e-6"
+        f";fit_order={k_fp};fit_rate={res_fp.aux.rate:.4f}"
+        f";predicted_iters="
+        f"{int(np.ceil(np.log(1e-6) / np.log(res_fp.aux.rate)))}"
+        f";converged={int(res_fp.converged)}"
+        f";words_per_iter_halo={fp_per_iter}",
+        backend="dense", shape=shape,
+        messages=fp_per_iter * res_fp.iterations)
 
     for be, w in lasso_words.items():
         row(f"tab_solvers_words_{be}", 0.0,

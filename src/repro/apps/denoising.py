@@ -4,19 +4,17 @@ denoising, and semi-supervised classification.
 Every routine is built on :class:`repro.filters.GraphFilter`, so it runs
 unchanged on any registered backend — dense, fused Pallas Block-ELL, or the
 ``shard_map``-distributed meshes — the paper's point being that the *same*
-Chebyshev recurrence implements all deployment modes.
-
-Two calling conventions are accepted for backward compatibility:
-
-* a :class:`~repro.core.graph.SensorGraph` (preferred) — pass
-  ``backend="..."`` to choose the execution substrate;
-* a legacy ``matvec`` callable computing ``L @ v`` — routed through the
-  graph-free ``"matvec"`` backend exactly as before.
+Chebyshev recurrence implements all deployment modes. Each takes a
+:class:`~repro.core.graph.SensorGraph`; pass ``backend="..."`` to choose
+the execution substrate. (The PR-1 ``matvec``-closure calling convention
+was removed; callers holding only an ``L @ v`` closure build a
+``GraphFilter`` without a graph and use the ``"matvec"`` backend
+directly.)
 """
 
 from __future__ import annotations
 
-from typing import Callable, Sequence, Union
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,9 +32,6 @@ from repro.solvers import (
     wiener,
 )
 
-Matvec = Callable[[jax.Array], jax.Array]
-GraphOrMatvec = Union[SensorGraph, Matvec]
-
 __all__ = [
     "smooth_heat",
     "denoise_tikhonov",
@@ -47,23 +42,21 @@ __all__ = [
 ]
 
 
-def _as_filter(g: GraphOrMatvec, bank, order: int, lmax: float,
+def _as_filter(g: SensorGraph, bank, order: int, lmax: float,
                backend: str | None, opts: dict):
-    """Build a GraphFilter + resolved (backend, opts) from either calling
-    convention (SensorGraph, or a legacy matvec closure)."""
-    if isinstance(g, SensorGraph):
-        filt = GraphFilter.from_multipliers(bank, order, graph=g, lmax=lmax)
-        return filt, backend or "dense", opts
-    if backend not in (None, "matvec"):
-        raise ValueError(
-            f"backend={backend!r} needs a SensorGraph, got a matvec callable"
+    """Build a GraphFilter + resolved (backend, opts) for a graph."""
+    if not isinstance(g, SensorGraph):
+        raise TypeError(
+            f"expected a SensorGraph, got {type(g).__name__}; the legacy "
+            "matvec-closure convention was removed — build a GraphFilter "
+            "and use backend='matvec' directly"
         )
-    filt = GraphFilter.from_multipliers(bank, order, lmax=lmax)
-    return filt, "matvec", {**opts, "matvec": g}
+    filt = GraphFilter.from_multipliers(bank, order, graph=g, lmax=lmax)
+    return filt, backend or "dense", opts
 
 
 def smooth_heat(
-    graph_or_matvec: GraphOrMatvec,
+    graph: SensorGraph,
     y: jax.Array,
     lmax: float,
     t: float = 1.0,
@@ -76,8 +69,8 @@ def smooth_heat(
 
     Parameters
     ----------
-    graph_or_matvec : SensorGraph or callable
-        The graph (any backend), or a legacy ``L @ v`` closure.
+    graph : SensorGraph
+        The graph to smooth on (any backend).
     y : jax.Array
         (N,) or (N, F) signal to smooth.
     lmax : float
@@ -88,12 +81,12 @@ def smooth_heat(
         ``GraphFilter`` backend (default ``dense`` for graphs).
     """
     filt, be, opts = _as_filter(
-        graph_or_matvec, [mult.heat(t)], order, lmax, backend, opts)
+        graph, [mult.heat(t)], order, lmax, backend, opts)
     return filt.apply(y, backend=be, **opts)[0]
 
 
 def denoise_tikhonov(
-    graph_or_matvec: GraphOrMatvec,
+    graph: SensorGraph,
     y: jax.Array,
     lmax: float,
     tau: float = 1.0,
@@ -107,12 +100,12 @@ def denoise_tikhonov(
     ``g(x) = tau / (tau + 2 x^r)`` — the closed-form minimizer of
     ``tau/2 ||f - y||^2 + f^T L^r f`` applied via Algorithm 1."""
     filt, be, opts = _as_filter(
-        graph_or_matvec, [mult.tikhonov(tau, r)], order, lmax, backend, opts)
+        graph, [mult.tikhonov(tau, r)], order, lmax, backend, opts)
     return filt.apply(y, backend=be, **opts)[0]
 
 
 def ssl_classify(
-    graph_or_matvec: GraphOrMatvec,
+    graph: SensorGraph,
     labels: jax.Array,
     lmax: float,
     tau: float = 1.0,
@@ -125,12 +118,12 @@ def ssl_classify(
     """Distributed binary SSL (Sec. V-B end): labelled nodes carry +-1,
     unlabelled carry 0; every node outputs ``sign((R~ y)_n)``."""
     scores = denoise_tikhonov(
-        graph_or_matvec, labels, lmax, tau, r, order, backend=backend, **opts)
+        graph, labels, lmax, tau, r, order, backend=backend, **opts)
     return jnp.where(scores >= 0.0, 1.0, -1.0)
 
 
 def wavelet_denoise_ista(
-    graph_or_matvec: GraphOrMatvec,
+    graph: SensorGraph,
     y: jax.Array,
     lmax: float,
     *,
@@ -163,7 +156,7 @@ def wavelet_denoise_ista(
     the legacy ``(denoised_signal, wavelet_coefficients)`` pair.
     """
     bank = mult.sgwt_filter_bank(lmax, n_scales=n_scales)
-    filt, be, opts = _as_filter(graph_or_matvec, bank, order, lmax,
+    filt, be, opts = _as_filter(graph, bank, order, lmax,
                                 backend, opts)
     problem = LassoProblem(filt=filt, y=y, mu=mu, step=step)
     res = solve(problem, method=method, n_iters=n_iters, tol=tol,
@@ -174,7 +167,7 @@ def wavelet_denoise_ista(
 
 
 def denoise_wiener(
-    graph_or_matvec: GraphOrMatvec,
+    graph: SensorGraph,
     y: jax.Array,
     lmax: float,
     *,
@@ -206,7 +199,7 @@ def denoise_wiener(
     def sqrt_psd(x):
         return np.sqrt(np.maximum(psd(x), 0.0))
 
-    filt, be, opts = _as_filter(graph_or_matvec, [sqrt_psd], order, lmax,
+    filt, be, opts = _as_filter(graph, [sqrt_psd], order, lmax,
                                 backend, opts)
     res = wiener(filt, y, noise_power, n_iters=n_iters, tol=tol,
                  backend=be, **opts)
@@ -214,7 +207,7 @@ def denoise_wiener(
 
 
 def inverse_filter(
-    graph_or_matvec: GraphOrMatvec,
+    graph: SensorGraph,
     observations: jax.Array,
     lmax: float,
     *,
@@ -237,7 +230,7 @@ def inverse_filter(
     Chebyshev recurrences: one adjoint up front, one degree-2M gram
     filter per iteration.
     """
-    filt, be, opts = _as_filter(graph_or_matvec, list(bank), order, lmax,
+    filt, be, opts = _as_filter(graph, list(bank), order, lmax,
                                 backend, opts)
     rhs = filt.adjoint(jnp.asarray(observations), backend=be, **opts)
     res = conjugate_gradient(

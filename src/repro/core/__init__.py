@@ -26,14 +26,12 @@ from repro.core.graph import (
     torus_graph,
 )
 from repro.core.operators import (
-    UnionFilterOperator,
     exact_multiplier_matrix,
     exact_union_apply,
 )
 
 __all__ = [
     "SensorGraph",
-    "UnionFilterOperator",
     "cheb_adjoint_apply",
     "cheb_apply",
     "cheb_apply_dense",

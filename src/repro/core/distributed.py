@@ -17,7 +17,7 @@ Two interchangeable matvec backends:
   graph-signal mesh cell.
 
 Both run under ``shard_map`` and compose with ``cheb_apply`` /
-``UnionFilterOperator`` unchanged, because those only see a matvec closure.
+``GraphFilter`` unchanged, because those only see a matvec closure.
 
 The halo backend additionally ships an **overlapped schedule**
 (:func:`halo_cheb_apply_overlapped`, the default): each partition's rows
@@ -49,10 +49,11 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import graph as graph_lib
 
-__all__ = ["PartitionPlan", "build_partition_plan", "repair_partition_plan",
+__all__ = ["PartitionPlan", "build_partition_plan",
+           "build_shift_partition_plans", "repair_partition_plan",
            "distributed_cheb_apply",
            "halo_matvec", "halo_cheb_apply_overlapped", "allgather_matvec",
-           "DistributedGraphContext"]
+           "DistributedGraphContext", "MultiShiftGraphContext"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -157,10 +158,16 @@ class PartitionPlan:
         return words
 
 
-def build_partition_plan(
-    adjacency, coords, n_parts: int, dtype=jnp.float32
-) -> PartitionPlan:
-    """Partition a graph spatially and precompute halo-exchange tables."""
+def _partition_layout(adjacency, coords, n_parts: int):
+    """Spatial order + boundary-first refinement for one edge pattern.
+
+    Returns ``(order, boundary_counts, n_local)`` — the final vertex
+    permutation (refinement absorbed), the true per-partition boundary-row
+    counts, and the padded per-device slot count. Factored out of
+    :func:`build_partition_plan` so multi-shift filters can compute ONE
+    layout from the union edge pattern and build every shift's tables
+    under it (:func:`build_shift_partition_plans`).
+    """
     a = np.asarray(adjacency, dtype=np.float64)
     n = a.shape[0]
     if coords is not None:
@@ -193,11 +200,30 @@ def build_partition_plan(
         boundary_counts[p] = int(is_boundary.sum())
         local_perm[sl] = p * n_local + np.concatenate(
             [np.nonzero(is_boundary)[0], np.nonzero(~is_boundary)[0]])
-    lap = lap[np.ix_(local_perm, local_perm)]
     # Padding rows keep the global tail slots, so real vertices still
     # occupy local_perm[:n] and the public `order` absorbs the refinement.
     assert np.all(local_perm[:n] < n)
-    order = order[local_perm[:n]]
+    return order[local_perm[:n]], boundary_counts, n_local
+
+
+def _plan_tables(
+    adjacency, order, boundary_counts, n_parts: int, n_local: int, dtype
+) -> PartitionPlan:
+    """Build a plan's halo tables for ``adjacency`` under a FIXED layout.
+
+    ``order``/``boundary_counts`` come from :func:`_partition_layout` — of
+    this adjacency itself (the single-shift path), or of a union edge
+    pattern that contains it (the multi-shift path; every shift-boundary
+    row is then a union-boundary row, so the boundary-block invariant the
+    overlapped schedule relies on still holds, re-asserted below).
+    """
+    a = np.asarray(adjacency, dtype=np.float64)
+    n = a.shape[0]
+    n_pad = n_local * n_parts
+
+    lap = np.zeros((n_pad, n_pad))
+    lp = np.diag(a.sum(axis=1)) - a
+    lap[:n, :n] = lp[np.ix_(order, order)]
     n_boundary = max(1, int(boundary_counts.max()))
 
     owner = np.repeat(np.arange(n_parts), n_local)
@@ -245,6 +271,51 @@ def build_partition_plan(
         n_boundary=n_boundary,
         boundary_counts=boundary_counts,
         pair_counts=pair_counts,
+    )
+
+
+def build_partition_plan(
+    adjacency, coords, n_parts: int, dtype=jnp.float32
+) -> PartitionPlan:
+    """Partition a graph spatially and precompute halo-exchange tables."""
+    order, boundary_counts, n_local = _partition_layout(
+        adjacency, coords, n_parts)
+    return _plan_tables(
+        adjacency, order, boundary_counts, n_parts, n_local, dtype)
+
+
+def build_shift_partition_plans(
+    adjacencies, coords, n_parts: int, dtype=jnp.float32
+) -> tuple[PartitionPlan, ...]:
+    """Per-shift plans over ONE shared vertex layout (DESIGN.md Sec. 11).
+
+    A multi-shift filter's joint recurrence interleaves matvecs in several
+    shift operators over the *same* signal vector, so every shift must see
+    the vertices in the same order — one scatter, one gather, R exchange
+    plans. The layout (spatial order + boundary-first refinement) is
+    computed from the union edge pattern ``sum_r |A_r|``; each shift's halo
+    tables are then built under that fixed order. Since every shift's
+    edges are a subset of the union's, each shift's sent vertices land
+    inside the union boundary block — the overlapped-schedule invariant —
+    and each plan carries its own ``halo_words`` (the per-shift words
+    model: shift r costs ``count_r * halo_words_r``; a temporal shift
+    whose edges never cross the spatial partition cut has
+    ``halo_words == 0`` and is communication-free).
+
+    Returns one :class:`PartitionPlan` per adjacency; all share ``order``,
+    ``n_local`` and ``boundary_counts``.
+    """
+    mats = [np.abs(np.asarray(a, dtype=np.float64)) for a in adjacencies]
+    if not mats:
+        raise ValueError("need at least one adjacency")
+    union = mats[0].copy()
+    for m in mats[1:]:
+        union += m
+    order, boundary_counts, n_local = _partition_layout(
+        union, coords, n_parts)
+    return tuple(
+        _plan_tables(a, order, boundary_counts, n_parts, n_local, dtype)
+        for a in adjacencies
     )
 
 
@@ -732,6 +803,136 @@ class DistributedGraphContext:
             return order * self.plan.halo_words
         n_dev = self.plan.n_parts
         return order * self.plan.n_local * n_dev * (n_dev - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MultiShiftGraphContext:
+    """Distributed context for a multi-shift joint filter (DESIGN.md
+    Sec. 11): R per-shift :class:`PartitionPlan` s over ONE shared vertex
+    layout (built by :func:`build_shift_partition_plans`), bound to a mesh
+    axis.
+
+    The joint recurrence runs inside a single ``shard_map`` program whose
+    per-shift matvec closures each do their own halo exchange — so one
+    scatter/gather round-trips the signal, while every matvec in shift r
+    moves exactly ``plans[r].halo_words`` words. Words per apply is the
+    per-shift sum ``sum_r count_r * halo_words_r`` with
+    ``count_r = M_r * prod_{s<r}(M_s + 1)``
+    (:func:`repro.filters.shift_matvec_counts`).
+    """
+
+    plans: tuple[PartitionPlan, ...]
+    mesh: Mesh
+    axis: str
+    lmaxes: tuple[float, ...]
+    _programs: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    @property
+    def plan(self) -> PartitionPlan:
+        """The first shift's plan — layout fields (order, n_local, n) are
+        shared by construction, so scatter/gather and words accounting
+        that only need the layout read them here."""
+        return self.plans[0]
+
+    def scatter_signal(self, f) -> jax.Array:
+        f = jnp.atleast_2d(jnp.asarray(f).T).T  # (N,) -> (N, 1)
+        plan = self.plan
+        pad = plan.n_local * plan.n_parts - plan.n
+        fp = jnp.concatenate(
+            [f[plan.order], jnp.zeros((pad,) + f.shape[1:], f.dtype)])
+        return jax.device_put(fp, NamedSharding(self.mesh, P(self.axis)))
+
+    def gather_signal(self, y) -> np.ndarray:
+        y = np.asarray(y)
+        inv = np.empty_like(self.plan.order)
+        inv[self.plan.order] = np.arange(self.plan.n)
+        return y[..., inv, :]
+
+    def _tables(self):
+        out = []
+        for plan in self.plans:
+            out.extend([plan.l_own, plan.l_halo, plan.send_idx])
+        return tuple(out)
+
+    def _joint_program(self, key, local_fn, lead_specs, out_specs):
+        fn = self._programs.get(key)
+        if fn is None:
+            table_specs = (P(self.axis),) * (3 * len(self.plans))
+            fn = jax.jit(shard_map(
+                local_fn, mesh=self.mesh,
+                in_specs=lead_specs + table_specs, out_specs=out_specs))
+            self._programs[key] = fn
+        return fn
+
+    def cheb_apply_joint(self, f_sharded, coeffs):
+        """Distributed joint ``Phi~ f``: per-shift halo exchange inside one
+        shard_map program. f_sharded: (P*n_local, F) sharded along the
+        vertex axis; coeffs: (eta, M_1+1, ..., M_R+1). Returns
+        (eta, P*n_local, F)."""
+        from repro.core import chebyshev  # local import to avoid cycle
+
+        r = len(self.plans)
+        lmaxes = self.lmaxes
+        axis = self.axis
+        coeffs = jnp.asarray(coeffs, f_sharded.dtype)
+
+        def local_fn(f_loc, coeffs, *tables):
+            mvs = [
+                partial(
+                    halo_matvec,
+                    l_own=tables[3 * i][0],
+                    l_halo=tables[3 * i + 1][0],
+                    send_idx=tables[3 * i + 2][0],
+                    axis_name=axis,
+                )
+                for i in range(r)
+            ]
+            return chebyshev.cheb_apply_joint(mvs, f_loc, coeffs, lmaxes)
+
+        fn = self._joint_program(
+            "joint_apply", local_fn,
+            lead_specs=(P(axis), P(*([None] * (r + 1)))),
+            out_specs=P(None, axis))
+        return fn(f_sharded, coeffs, *self._tables())
+
+    def cheb_adjoint_joint(self, a_sharded, coeffs):
+        """Distributed joint ``Phi~* a`` for a_sharded shaped
+        (eta, P*n_local, F) sharded along the vertex axis."""
+        from repro.core import chebyshev
+
+        r = len(self.plans)
+        lmaxes = self.lmaxes
+        axis = self.axis
+        coeffs = jnp.asarray(coeffs, a_sharded.dtype)
+
+        def local_fn(a_loc, coeffs, *tables):
+            mvs = [
+                partial(
+                    halo_matvec,
+                    l_own=tables[3 * i][0],
+                    l_halo=tables[3 * i + 1][0],
+                    send_idx=tables[3 * i + 2][0],
+                    axis_name=axis,
+                )
+                for i in range(r)
+            ]
+            return chebyshev.cheb_adjoint_apply_joint(
+                mvs, a_loc, coeffs, lmaxes)
+
+        fn = self._joint_program(
+            "joint_adjoint", local_fn,
+            lead_specs=(P(None, axis), P(*([None] * (r + 1)))),
+            out_specs=P(axis))
+        return fn(a_sharded, coeffs, *self._tables())
+
+    def messages_per_apply(self, matvec_counts) -> int:
+        """Per-shift words sum: shift r's ``count_r`` matvecs each move
+        its own plan's ``halo_words``."""
+        return int(sum(
+            int(c) * p.halo_words
+            for c, p in zip(matvec_counts, self.plans)
+        ))
 
 
 # ------------------------------------------------------------------------

@@ -1,108 +1,21 @@
-"""Unions of graph Fourier multiplier operators (paper Sec. III) and their
-Chebyshev-approximated implementations.
+"""Exact eigendecomposition oracles for multiplier unions (paper eq. 5/6).
 
-``UnionFilterOperator`` is the public entry point: built once from a list of
-multipliers (+ order M and a spectrum bound), it applies ``Phi~ f``,
-``Phi~* a`` and ``Phi~* Phi~ f`` through any Laplacian matvec — dense,
-Pallas BSR, or the shard_map-distributed halo matvec.
-
-``exact_union_apply`` is the eigendecomposition oracle (eq. 5/6) used by the
-tests to verify convergence of the approximation — it is exactly the
-computation the paper's method is designed to avoid at scale.
+These are the O(N^3) computations the Chebyshev method is designed to
+avoid at scale — kept only as the test/benchmark ground truth the
+approximated operators are verified against. The approximated operators
+themselves live in :class:`repro.filters.GraphFilter` (the
+``UnionFilterOperator`` shim that used to sit here was removed once every
+caller had migrated; build filters with ``GraphFilter.from_multipliers``
+or ``GraphFilter.from_coefficients`` instead).
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Sequence
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import chebyshev
-
-__all__ = ["UnionFilterOperator", "exact_union_apply", "exact_multiplier_matrix"]
-
-Matvec = Callable[[jax.Array], jax.Array]
-
-
-@dataclasses.dataclass(frozen=True)
-class UnionFilterOperator:
-    """Chebyshev-approximated union of graph Fourier multipliers ``Phi~``.
-
-    .. deprecated::
-        Superseded by :class:`repro.filters.GraphFilter`, which adds
-        backend dispatch (dense / bsr / halo / allgather / grid) behind
-        the same spectral state. This class remains as a thin stable shim
-        for matvec-closure callers and existing tests.
-
-    Attributes:
-      coeffs: (eta, M+1) Chebyshev coefficients, paper eq. (8) convention.
-      lmax: spectrum upper bound the polynomials were shifted to.
-      gram_coeffs: (2M+1,) coefficients of ``Phi~* Phi~`` (Sec. IV-C),
-        precomputed via the product identity.
-    """
-
-    coeffs: np.ndarray
-    lmax: float
-    gram_coeffs: np.ndarray
-
-    @classmethod
-    def from_multipliers(
-        cls,
-        multipliers: Sequence[Callable[[np.ndarray], np.ndarray]],
-        order: int,
-        lmax: float,
-        quad_points: int | None = None,
-    ) -> "UnionFilterOperator":
-        c = chebyshev.cheb_coefficients(multipliers, order, lmax, quad_points)
-        return cls(coeffs=c, lmax=float(lmax), gram_coeffs=chebyshev.gram_coefficients(c))
-
-    @property
-    def eta(self) -> int:
-        return self.coeffs.shape[0]
-
-    @property
-    def order(self) -> int:
-        return self.coeffs.shape[1] - 1
-
-    # -- operator applications -------------------------------------------
-
-    def apply(self, matvec: Matvec, f: jax.Array) -> jax.Array:
-        """``Phi~ f`` -> (eta,) + f.shape. Cost: M matvecs / 2M|E| messages."""
-        return chebyshev.cheb_apply(matvec, f, self.coeffs, self.lmax)
-
-    def apply_dense(self, laplacian_matrix: jax.Array, f: jax.Array) -> jax.Array:
-        return self.apply(lambda v: laplacian_matrix @ v, f)
-
-    def adjoint(self, matvec: Matvec, a: jax.Array) -> jax.Array:
-        """``Phi~* a`` for a shaped (eta, N, ...). Cost: M matvecs on
-        eta-wide blocks / 2M|E| length-eta messages (Sec. IV-B)."""
-        return chebyshev.cheb_adjoint_apply(matvec, a, self.coeffs, self.lmax)
-
-    def adjoint_dense(self, laplacian_matrix: jax.Array, a: jax.Array) -> jax.Array:
-        return self.adjoint(lambda v: laplacian_matrix @ v, a)
-
-    def gram_apply(self, matvec: Matvec, f: jax.Array) -> jax.Array:
-        """``Phi~* Phi~ f`` as a *single* degree-2M filter (Sec. IV-C).
-
-        Cost: 2M matvecs / 4M|E| messages — half of composing adjoint(apply).
-        """
-        out = chebyshev.cheb_apply(
-            matvec, f, jnp.asarray(self.gram_coeffs)[None, :], self.lmax
-        )
-        return out[0]
-
-    def gram_apply_dense(self, laplacian_matrix: jax.Array, f: jax.Array) -> jax.Array:
-        return self.gram_apply(lambda v: laplacian_matrix @ v, f)
-
-    def operator_norm_bound(self) -> float:
-        """Upper bound on ||Phi~||^2 = max_x sum_j p_j(x)^2 over the shifted
-        domain — used to pick the ISTA step size tau < 2 / ||W~||^2."""
-        x = np.linspace(0.0, self.lmax, 8192)
-        vals = chebyshev.cheb_eval(self.coeffs, x, self.lmax)
-        return float(np.max(np.sum(np.atleast_2d(vals) ** 2, axis=0)))
+__all__ = ["exact_union_apply", "exact_multiplier_matrix"]
 
 
 def exact_multiplier_matrix(

@@ -2,27 +2,39 @@
 
 Importing this package registers the shipped backends (``dense``, ``bsr``,
 ``halo``, ``allgather``, ``grid``, ``matvec``); see DESIGN.md Sec. 6 for the
-architecture and README.md for the support matrix.
+architecture and README.md for the support matrix. What each backend can do
+is declared in a frozen :class:`BackendCapabilities` record (``traceable``,
+``sparse_input``, ``multi_shift``) consulted through the thin accessors
+below.
 """
 
-from repro.filters.api import GraphFilter, bucket_size
+from repro.filters.api import GraphFilter, bucket_size, shift_matvec_counts
 from repro.filters.registry import (
+    BackendCapabilities,
     FilterBackend,
     available_backends,
+    backend_capabilities,
     backend_is_traceable,
+    backend_supports_multi_shift,
     backend_supports_sparse,
     get_backend,
     register_backend,
+    require_capability,
 )
 from repro.filters import backends as _backends  # noqa: F401  (registers)
 
 __all__ = [
+    "BackendCapabilities",
     "FilterBackend",
     "GraphFilter",
     "available_backends",
+    "backend_capabilities",
     "backend_is_traceable",
+    "backend_supports_multi_shift",
     "backend_supports_sparse",
     "bucket_size",
     "get_backend",
     "register_backend",
+    "require_capability",
+    "shift_matvec_counts",
 ]

@@ -10,12 +10,18 @@ surface::
     back = filt.adjoint(out)                 # f.shape
     gram = filt.gram(f)                      # Phi~* Phi~ f, one 2M filter
 
-replacing the three divergent entry points it consolidates
-(``core.chebyshev.cheb_apply``, ``kernels.ops.cheb_apply_bsr``,
-``core.distributed.DistributedGraphContext.cheb_apply`` — all still work,
-as thin shims over the same machinery). Backends are looked up in
-``repro.filters.registry``; see DESIGN.md Sec. 6 for the dispatch design
-and the backend support matrix in README.md.
+Beyond the paper, a filter may be built over an ordered tuple of
+*commuting shift operators* (arXiv:2003.11152 joint polynomials — e.g. a
+time-vertex product of the sensor Laplacian and a temporal Laplacian)::
+
+    filt = GraphFilter.from_shifts([g_sensor, g_time], joint_coeffs)
+    out  = filt.apply(f, backend="halo")     # per-shift halo plans
+
+Single-shift filters are the R = 1 special case of the same machinery.
+Backends are looked up in ``repro.filters.registry`` and declare what they
+support through a frozen ``BackendCapabilities`` record (``traceable``,
+``sparse_input``, ``multi_shift``); see DESIGN.md Sec. 6 / 11 for the
+dispatch design and the backend support matrix in README.md.
 """
 
 from __future__ import annotations
@@ -31,7 +37,7 @@ from repro.core import chebyshev
 from repro.core.graph import SensorGraph
 from repro.filters import registry
 
-__all__ = ["GraphFilter", "bucket_size"]
+__all__ = ["GraphFilter", "bucket_size", "shift_matvec_counts"]
 
 Multiplier = Callable[[np.ndarray], np.ndarray]
 
@@ -47,20 +53,58 @@ def bucket_size(n: int, cap: int | None = None, *, floor: int = _BUCKET_FLOOR) -
     power-of-two buckets means a handful of compiled programs serve every
     workload instead of one trace per novel shape.
 
+    The bucket set is ``{floor * 2**k} ∪ {cap}``: the power-of-two ladder
+    starts at ``floor``, and ``cap`` — when given — is the one permitted
+    non-ladder value (the caller's hard "full size", e.g. the vertex count
+    N for submatrices or the scheduler's ``max_panel``). Pinned behavior:
+
+    * ``n > cap`` returns ``cap`` exactly — the caller's clamp always
+      wins, even though the bucket no longer covers ``n`` (stream and
+      serve both detect ``bucket >= cap`` and fall back to the full-size
+      path).
+    * a ``cap`` that is not a power of two is returned verbatim whenever
+      the ladder crosses it — never rounded, since the cap *is* a real
+      compiled shape (the full problem size).
+    * ``cap < floor`` returns ``cap`` (the clamp also beats the floor).
+
     Parameters
     ----------
     n : int
-        The true size to cover (``n <= bucket_size(n, ...)`` unless capped).
+        The true size to cover (``n <= bucket_size(n, ...)`` unless the
+        cap clamps). Must be >= 0.
     cap : int, optional
-        Upper clamp — e.g. the full vertex count N for submatrices, or the
-        scheduler's ``max_panel`` for panel widths.
+        Upper clamp; must be >= 1 when given.
     floor : int
-        Smallest bucket returned; coarser floors mean fewer programs.
+        Smallest ladder bucket; must be >= 1. Coarser floors mean fewer
+        programs.
     """
+    if n < 0:
+        raise ValueError(f"bucket_size needs n >= 0, got {n}")
+    if floor < 1:
+        raise ValueError(f"bucket_size needs floor >= 1, got {floor}")
+    if cap is not None and cap < 1:
+        raise ValueError(f"bucket_size needs cap >= 1, got {cap}")
     b = floor
     while b < n:
         b *= 2
     return b if cap is None else min(b, cap)
+
+
+def shift_matvec_counts(orders: Sequence[int]) -> tuple[int, ...]:
+    """Per-shift matvec counts of one joint apply (DESIGN.md Sec. 11.2).
+
+    The joint recurrence restarts shift r's Krylov sequence once per
+    combination of outer Krylov vectors, so shift r performs
+    ``M_r * prod_{s<r} (M_s + 1)`` matvecs. For one shift this is the
+    familiar M; the per-shift words model multiplies each count by that
+    shift's own ``halo_words``.
+    """
+    counts: list[int] = []
+    prefix = 1
+    for m in orders:
+        counts.append(int(m) * prefix)
+        prefix *= int(m) + 1
+    return tuple(counts)
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -72,28 +116,37 @@ class GraphFilter:
     and identity hashing lets a filter serve as a dict key or jit static
     argument.
 
-    Carries the *spectral* description only — the multiplier bank, the
-    truncation order, the spectrum bound, and the precomputed coefficient
-    matrices. Graph-operator operands (dense Laplacian, Block-ELL tiles,
-    partition plans) are built lazily per backend and cached.
+    Carries the *spectral* description only — the coefficient tensor, the
+    spectrum bound(s), and the shift structure. Graph-operator operands
+    (dense Laplacians, Block-ELL tiles, partition plans) are built lazily
+    per backend and cached.
 
     Parameters
     ----------
     coeffs : numpy.ndarray
         (eta, M+1) Chebyshev coefficients — paper eq. (8) convention (the
-        k = 0 term enters with a 1/2 factor at evaluation time).
+        k = 0 term enters with a 1/2 factor at evaluation time). For a
+        multi-shift filter, the joint (eta, M_1+1, ..., M_R+1) tensor with
+        the half convention applied per axis.
     lmax : float
-        Upper bound on the Laplacian spectrum the polynomials were shifted
-        to (paper Sec. IV-A: need not be tight).
+        Upper bound on the (first) shift's spectrum the polynomials were
+        shifted to (paper Sec. IV-A: need not be tight).
     gram_coeffs : numpy.ndarray
-        (2M+1,) coefficients of ``Phi~* Phi~`` as a single filter
-        (paper Sec. IV-C product identity).
+        (2M+1,) coefficients of ``Phi~* Phi~`` as a single filter (paper
+        Sec. IV-C product identity); the (2M_1+1, ..., 2M_R+1) joint
+        tensor for multi-shift filters.
     graph : SensorGraph, optional
-        The graph this filter is bound to. Required by every backend except
-        ``"matvec"``; bind one with :meth:`bind`.
+        The (first-shift) graph this filter is bound to. Required by every
+        backend except ``"matvec"``; bind one with :meth:`bind`.
     multipliers : tuple of callables, optional
         The original multiplier bank ``g_j: [0, lmax] -> R`` (kept for
-        re-expansion and diagnostics).
+        re-expansion and diagnostics; single-shift only).
+    shifts : tuple of SensorGraph, optional
+        The full ordered shift tuple for a multi-shift filter
+        (``shifts[0] is graph``); None on single-shift filters.
+    lmaxes : tuple of float, optional
+        Per-shift spectrum bounds (``lmaxes[0] == lmax``); None on
+        single-shift filters.
 
     Examples
     --------
@@ -108,9 +161,9 @@ class GraphFilter:
     gram_coeffs: np.ndarray
     graph: SensorGraph | None = None
     multipliers: tuple[Multiplier, ...] | None = None
-    _states: dict = dataclasses.field(
-        default_factory=dict, repr=False, compare=False
-    )
+    shifts: tuple[SensorGraph, ...] | None = None
+    lmaxes: tuple[float, ...] | None = None
+    _states: dict = dataclasses.field(default_factory=dict, repr=False, compare=False)
 
     # -- constructors ----------------------------------------------------
 
@@ -125,6 +178,8 @@ class GraphFilter:
         quad_points: int | None = None,
     ) -> "GraphFilter":
         """Expand a multiplier bank to Chebyshev coefficients (eq. 8).
+
+        The single-shift convenience constructor (R = 1).
 
         Parameters
         ----------
@@ -174,8 +229,84 @@ class GraphFilter:
             graph=graph,
         )
 
+    @classmethod
+    def from_shifts(
+        cls,
+        shifts: Sequence[SensorGraph],
+        coeffs: np.ndarray,
+        *,
+        lmaxes: Sequence[float] | None = None,
+    ) -> "GraphFilter":
+        """Build a joint polynomial filter over an ordered shift tuple.
+
+        Expresses product/joint polynomials of several *commuting* shift
+        operators (arXiv:2003.11152) — the canonical instance being the
+        time-vertex Cartesian product, where shift 1 is the sensor
+        Laplacian acting along the vertex axis and shift 2 a temporal
+        Laplacian along the time axis (``L_G (x) I`` and ``I (x) L_T``
+        commute by construction). Every shift graph must have the same
+        vertex count — the product graph's, with each adjacency encoding
+        that shift's edges only, so each shift carries its own halo
+        exchange plan on distributed backends.
+
+        Parameters
+        ----------
+        shifts : sequence of SensorGraph
+            R graphs over the same (product) vertex set; ``shifts[r]``'s
+            Laplacian is the r-th shift operator.
+        coeffs : numpy.ndarray
+            Joint (eta, M_1+1, ..., M_R+1) coefficient tensor (an
+            (M_1+1, ..., M_R+1) tensor is promoted to eta = 1). Build
+            separable tensors with
+            ``chebyshev.separable_joint_coefficients``.
+        lmaxes : sequence of float, optional
+            Per-shift spectrum bounds; defaults to each graph's
+            Anderson--Morley ``lmax_bound()``.
+        """
+        shifts = tuple(shifts)
+        if not shifts:
+            raise ValueError("from_shifts needs at least one shift")
+        n = shifts[0].n_vertices
+        for r, g in enumerate(shifts):
+            if g.n_vertices != n:
+                raise ValueError(
+                    f"shift {r} has {g.n_vertices} vertices, shift 0 has {n};"
+                    " all shifts act on the same product vertex set"
+                )
+        c = np.asarray(coeffs, dtype=np.float64)
+        if c.ndim == len(shifts):
+            c = c[np.newaxis]
+        if c.ndim != len(shifts) + 1:
+            raise ValueError(
+                f"joint coeffs for {len(shifts)} shifts must have ndim "
+                f"{len(shifts) + 1} (eta leading), got shape {c.shape}"
+            )
+        if lmaxes is None:
+            lmaxes = tuple(float(g.lmax_bound()) for g in shifts)
+        else:
+            lmaxes = tuple(float(v) for v in lmaxes)
+            if len(lmaxes) != len(shifts):
+                raise ValueError(f"{len(lmaxes)} lmaxes for {len(shifts)} shifts")
+        return cls(
+            coeffs=c,
+            lmax=lmaxes[0],
+            gram_coeffs=chebyshev.joint_gram_coefficients(c),
+            graph=shifts[0],
+            shifts=shifts,
+            lmaxes=lmaxes,
+        )
+
     def bind(self, graph: SensorGraph) -> "GraphFilter":
-        """Return a copy bound to ``graph`` (backend states reset)."""
+        """Return a copy bound to ``graph`` (backend states reset).
+
+        Single-shift only — rebind a multi-shift filter by rebuilding it
+        with :meth:`from_shifts` (every shift graph changes together).
+        """
+        if self.n_shifts > 1:
+            raise ValueError(
+                "bind() is single-shift; rebuild multi-shift filters with "
+                "GraphFilter.from_shifts"
+            )
         return dataclasses.replace(self, graph=graph, _states={})
 
     # -- introspection ---------------------------------------------------
@@ -186,18 +317,57 @@ class GraphFilter:
         return self.coeffs.shape[0]
 
     @property
+    def n_shifts(self) -> int:
+        """Number of shift operators (1 for classic single-shift filters)."""
+        return self.coeffs.ndim - 1
+
+    @property
     def order(self) -> int:
-        """Chebyshev truncation order M."""
+        """Chebyshev truncation order M (single-shift filters only)."""
+        if self.n_shifts > 1:
+            raise ValueError(
+                f"multi-shift filter has per-shift orders {self.orders}; "
+                "use .orders"
+            )
         return self.coeffs.shape[1] - 1
+
+    @property
+    def orders(self) -> tuple[int, ...]:
+        """Per-shift truncation orders (M_1, ..., M_R)."""
+        return tuple(m - 1 for m in self.coeffs.shape[1:])
+
+    @property
+    def shift_graphs(self) -> tuple[SensorGraph | None, ...]:
+        """The ordered shift tuple ((graph,) for single-shift filters)."""
+        return self.shifts if self.shifts is not None else (self.graph,)
+
+    @property
+    def shift_lmaxes(self) -> tuple[float, ...]:
+        """Per-shift spectrum bounds ((lmax,) for single-shift filters)."""
+        return self.lmaxes if self.lmaxes is not None else (self.lmax,)
 
     def operator_norm_bound(self) -> float:
         """Upper bound on ``||Phi~||^2 = max_x sum_j p_j(x)^2`` over the
-        shifted domain — e.g. to pick the ISTA step ``tau < 2/||W~||^2``."""
-        x = np.linspace(0.0, self.lmax, 8192)
-        vals = chebyshev.cheb_eval(self.coeffs, x, self.lmax)
-        return float(np.max(np.sum(np.atleast_2d(vals) ** 2, axis=0)))
+        shifted domain — e.g. to pick the ISTA step ``tau < 2/||W~||^2``.
+        Multi-shift filters maximize over the tensor spectral grid."""
+        if self.n_shifts == 1:
+            x = np.linspace(0.0, self.lmax, 8192)
+            vals = np.atleast_2d(chebyshev.cheb_eval(self.coeffs, x, self.lmax))
+        else:
+            pts = max(64, int(round(8192 ** (1.0 / self.n_shifts))))
+            xs = [np.linspace(0.0, lm, pts) for lm in self.shift_lmaxes]
+            vals = chebyshev.cheb_eval_joint(self.coeffs, xs, self.shift_lmaxes)
+            vals = vals.reshape(self.eta, -1)
+        return float(np.max(np.sum(vals**2, axis=0)))
 
     # -- backend dispatch ------------------------------------------------
+
+    def _backend(self, name: str) -> registry.FilterBackend:
+        """Resolve a backend and enforce this filter's capability needs."""
+        be = registry.get_backend(name)
+        if self.n_shifts > 1:
+            registry.require_capability(be, "multi_shift")
+        return be
 
     def _backend_state(self, be: registry.FilterBackend, opts: dict) -> Any:
         # Backends that share prepared operands (halo/allgather both use
@@ -216,12 +386,10 @@ class GraphFilter:
         staging a trace (``jax.jit`` over a filter call) use this so the
         prepared operands are concrete before tracing begins.
         """
-        be = registry.get_backend(backend)
+        be = self._backend(backend)
         self._backend_state(be, opts)
 
-    def apply(
-        self, f: jax.Array, *, backend: str = "dense", **opts
-    ) -> jax.Array:
+    def apply(self, f: jax.Array, *, backend: str = "dense", **opts) -> jax.Array:
         """Apply the union ``Phi~ f`` through one shared recurrence.
 
         Parameters
@@ -232,7 +400,8 @@ class GraphFilter:
             Registered backend name — one of
             ``repro.filters.available_backends()``; shipping backends are
             ``dense``, ``bsr``, ``halo``, ``allgather``, ``grid`` and the
-            graph-free ``matvec``.
+            graph-free ``matvec``. Multi-shift filters require a backend
+            declaring the ``multi_shift`` capability (dense/bsr/halo).
         **opts
             Backend options (e.g. ``block_size=`` / ``krylov_dtype=`` for
             ``bsr``, ``mesh=`` / ``axis=`` for distributed backends,
@@ -243,7 +412,7 @@ class GraphFilter:
         jax.Array
             (eta,) + f.shape stacked outputs ``[Psi~_1 f, ..., Psi~_eta f]``.
         """
-        be = registry.get_backend(backend)
+        be = self._backend(backend)
         return be.apply(self, self._backend_state(be, opts), f, **opts)
 
     def apply_panel(
@@ -302,14 +471,14 @@ class GraphFilter:
         return a plain callable; their compilation reuse lives in their
         own prepared state.
         """
-        be = registry.get_backend(backend)
+        be = self._backend(backend)
         state = self._backend_state(be, opts)
         c = coeffs
 
         def run(panel: jax.Array) -> jax.Array:
             return be.apply(self, state, panel, coeffs=c, **opts)
 
-        if getattr(be, "traceable", False):
+        if be.capabilities.traceable:
             return jax.jit(run)
         return run
 
@@ -328,7 +497,8 @@ class GraphFilter:
         only the M-hop neighbourhood of that set, so backends declaring the
         ``sparse_input`` capability run it on the induced submatrix —
         cost (flops and halo words) scales with the neighbourhood size,
-        not N. Backends without the capability fall back to a full
+        not N. Backends without the capability — and multi-shift filters,
+        whose reach spans several edge sets — fall back to a full
         ``apply`` (identical output, no savings).
 
         Parameters
@@ -346,15 +516,13 @@ class GraphFilter:
             (eta,) + delta.shape — equal to ``apply(delta)`` up to float
             tolerance, zero outside the M-hop reach of ``support``.
         """
-        be = registry.get_backend(backend)
-        if not getattr(be, "sparse_input", False):
+        be = self._backend(backend)
+        if not be.capabilities.sparse_input or self.n_shifts > 1:
             return self.apply(delta, backend=backend, **opts)
         state = self._backend_state(be, opts)
         return be.apply_sparse(self, state, delta, support, **opts)
 
-    def adjoint(
-        self, a: jax.Array, *, backend: str = "dense", **opts
-    ) -> jax.Array:
+    def adjoint(self, a: jax.Array, *, backend: str = "dense", **opts) -> jax.Array:
         """Apply the adjoint ``Phi~* a`` (paper eq. 13 / Sec. IV-B).
 
         Parameters
@@ -367,27 +535,52 @@ class GraphFilter:
         jax.Array
             signal.shape adjoint output.
         """
-        be = registry.get_backend(backend)
+        be = self._backend(backend)
         return be.adjoint(self, self._backend_state(be, opts), a, **opts)
 
-    def gram(
-        self, f: jax.Array, *, backend: str = "dense", **opts
+    def apply_series(
+        self,
+        f: jax.Array,
+        series: np.ndarray,
+        *,
+        backend: str = "dense",
+        **opts,
     ) -> jax.Array:
+        """Apply an arbitrary polynomial ``p(S_1..S_R) f`` in this
+        filter's shifts, reusing the prepared backend state.
+
+        ``series`` is one (M'+1,)-shaped coefficient vector — or a joint
+        (M'_1+1, ..., M'_R+1) tensor for multi-shift filters — in the
+        usual half-first-coefficient convention; its degree need not match
+        the filter's. This is how ``gram`` runs the degree-2M product
+        series and how the Chebyshev inverse preconditioner
+        (``repro.solvers.cheb_inverse``) applies its fitted
+        ``q(lambda) ~= 1/h(lambda)`` polynomial without building a second
+        filter (same Laplacian operands, same plans, zero extra prepares).
+        """
+        c = np.asarray(series, dtype=np.float64)
+        if c.ndim != self.n_shifts:
+            raise ValueError(
+                f"series for a {self.n_shifts}-shift filter must have ndim "
+                f"{self.n_shifts}, got shape {c.shape}"
+            )
+        be = self._backend(backend)
+        state = self._backend_state(be, opts)
+        out = be.apply(self, state, f, coeffs=c[np.newaxis], **opts)
+        return out[0]
+
+    def gram(self, f: jax.Array, *, backend: str = "dense", **opts) -> jax.Array:
         """``Phi~* Phi~ f`` as a *single* degree-2M filter (Sec. IV-C).
 
         Costs 2M matvecs — half of composing ``adjoint(apply(f))``.
         """
-        be = registry.get_backend(backend)
-        state = self._backend_state(be, opts)
-        out = be.apply(
-            self, state, f, coeffs=np.atleast_2d(self.gram_coeffs), **opts
-        )
-        return out[0]
+        return self.apply_series(f, self.gram_coeffs, backend=backend, **opts)
 
     def messages_per_apply(
         self,
         order: int | None = None,
         *,
+        orders: Sequence[int] | None = None,
         backend: str = "halo",
         **opts,
     ) -> int:
@@ -399,9 +592,12 @@ class GraphFilter:
 
         * ``dense`` / ``bsr`` / ``matvec`` — 0: single-device, the
           "communication" is HBM traffic, not network words.
-        * ``halo`` — ``M * halo_words`` with ``halo_words <= 2|E|``: a
-          boundary vertex is sent once per neighbouring *partition*, not
-          once per edge, so the mesh does no worse than the radio bound.
+        * ``halo`` — ``sum_r count_r * halo_words_r``: each shift r
+          performs ``count_r = M_r * prod_{s<r}(M_s + 1)`` matvecs on its
+          own exchange plan (for one shift: ``M * halo_words`` with
+          ``halo_words <= 2|E|`` — a boundary vertex is sent once per
+          neighbouring *partition*, not once per edge, so the mesh does
+          no worse than the radio bound).
         * ``allgather`` — ``M * n_local * P * (P - 1)``: every device ships
           its whole slab to everyone each order (the §Perf "before").
         * ``grid`` — ``M * 2 * (P - 1) * side``: one boundary row up and
@@ -411,7 +607,12 @@ class GraphFilter:
         Parameters
         ----------
         order : int, optional
-            Recurrence order M; defaults to this filter's order.
+            Recurrence order M (single-shift filters only); defaults to
+            this filter's order. Solvers pass e.g. ``2M`` for the gram
+            series.
+        orders : sequence of int, optional
+            Per-shift orders (multi-shift); defaults to ``self.orders``.
+            Mutually exclusive with ``order``.
         backend : str
             Backend whose communication model to evaluate.
 
@@ -420,8 +621,20 @@ class GraphFilter:
         int
             Scalar words per apply of one (N,) signal.
         """
-        be = registry.get_backend(backend)
+        if order is not None and orders is not None:
+            raise ValueError("pass order= or orders=, not both")
+        if orders is None:
+            if order is not None:
+                if self.n_shifts > 1:
+                    raise ValueError(
+                        "multi-shift filter: pass per-shift orders= "
+                        "instead of a scalar order="
+                    )
+                orders = (int(order),)
+            else:
+                orders = self.orders
+        elif len(orders) != self.n_shifts:
+            raise ValueError(f"{len(orders)} orders for {self.n_shifts} shifts")
+        be = self._backend(backend)
         state = self._backend_state(be, opts)
-        return be.messages_per_apply(
-            self, state, self.order if order is None else order
-        )
+        return be.messages_per_apply(self, state, shift_matvec_counts(orders))

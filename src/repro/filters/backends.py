@@ -41,12 +41,14 @@ from repro.core import chebyshev
 from repro.core import graph as graph_lib
 from repro.core.distributed import (
     DistributedGraphContext,
+    MultiShiftGraphContext,
     build_partition_plan,
+    build_shift_partition_plans,
     grid_cheb_apply_ca,
     grid_slab_matvec,
 )
 from repro.filters.api import bucket_size
-from repro.filters.registry import register_backend
+from repro.filters.registry import BackendCapabilities, register_backend
 from repro.kernels import autotune, ops as kops, ref as kref
 
 __all__ = [
@@ -108,7 +110,8 @@ class MatvecBackend:
 
     name = "matvec"
     prepare_opts: frozenset[str] = frozenset()
-    traceable = True  # pure jax iff the caller's matvec is; assume so
+    # traceable: pure jax iff the caller's matvec is; assume so.
+    capabilities = BackendCapabilities(traceable=True)
 
     def prepare(self, filt, **_):
         return None
@@ -124,7 +127,7 @@ class MatvecBackend:
             raise ValueError("backend 'matvec' requires matvec=")
         return chebyshev.cheb_adjoint_apply(matvec, a, filt.coeffs, filt.lmax)
 
-    def messages_per_apply(self, filt, state, order: int) -> int:
+    def messages_per_apply(self, filt, state, matvec_counts) -> int:
         return 0
 
 
@@ -134,11 +137,15 @@ class DenseBackend:
 
     name = "dense"
     prepare_opts: frozenset[str] = frozenset()
-    traceable = True
-    sparse_input = True
+    capabilities = BackendCapabilities(
+        traceable=True, sparse_input=True, multi_shift=True
+    )
 
     def prepare(self, filt, **_):
         g = _require_graph(filt, self.name)
+        if filt.n_shifts > 1:
+            # One dense Laplacian per shift; apply branches on the tuple.
+            return tuple(s.laplacian() for s in filt.shifts)
         return g.laplacian()
 
     def apply_sparse(
@@ -181,17 +188,29 @@ class DenseBackend:
 
     def apply(self, filt, lap, f, *, coeffs=None, **_):
         c = _coeffs_or(filt, coeffs)
+        if isinstance(lap, tuple):
+            mvs = [
+                lambda v, m=m: jnp.tensordot(m, v, axes=1) for m in lap
+            ]
+            return chebyshev.cheb_apply_joint(mvs, f, c, filt.shift_lmaxes)
         return chebyshev.cheb_apply(lambda v: lap @ v, f, c, filt.lmax)
 
     def adjoint(self, filt, lap, a, **_):
         # tensordot (not @): the adjoint recurrence carries the eta blocks
         # in trailing dims, so contract the vertex axis explicitly.
+        if isinstance(lap, tuple):
+            mvs = [
+                lambda v, m=m: jnp.tensordot(m, v, axes=1) for m in lap
+            ]
+            return chebyshev.cheb_adjoint_apply_joint(
+                mvs, a, filt.coeffs, filt.shift_lmaxes
+            )
         return chebyshev.cheb_adjoint_apply(
             lambda v: jnp.tensordot(lap, v, axes=1), a, filt.coeffs,
             filt.lmax,
         )
 
-    def messages_per_apply(self, filt, state, order: int) -> int:
+    def messages_per_apply(self, filt, state, matvec_counts) -> int:
         return 0
 
 
@@ -201,6 +220,23 @@ class _BsrState:
     perm: np.ndarray  # vertex permutation applied before tiling
     inv: np.ndarray  # positions of the true vertices in permuted order
     n: int  # true vertex count
+    n_pad: int
+
+
+@dataclasses.dataclass(frozen=True)
+class _BsrMultiState:
+    """Multi-shift Block-ELL state: one tiling per shift, shared layout.
+
+    Every shift's Laplacian is permuted by the SAME spatial order (and
+    padded to the same ``n_pad``) so the joint recurrence interleaves
+    per-shift matvecs on one signal layout — the single-chip analog of
+    the shared-layout partition plans.
+    """
+
+    bells: tuple
+    perm: np.ndarray
+    inv: np.ndarray
+    n: int
     n_pad: int
 
 
@@ -223,21 +259,35 @@ class BsrBackend:
 
     name = "bsr"
     prepare_opts: frozenset[str] = frozenset({"block_size"})
-    traceable = True  # pallas_call (or interpret mode) traces fine in scan
+    # traceable: pallas_call (or interpret mode) traces fine in scan.
+    capabilities = BackendCapabilities(traceable=True, multi_shift=True)
 
     def prepare(self, filt, *, block_size: int = 8, **_):
         g = _require_graph(filt, self.name)
-        lap = np.asarray(g.laplacian(), np.float64)
-        n = lap.shape[0]
+        n = g.n_vertices
         if g.coords is not None:
             perm = graph_lib.spatial_partition_order(
                 np.asarray(g.coords), max(n // block_size, 1)
             )
         else:
             perm = np.arange(n)
-        bell = kref.bsr_from_dense(lap[np.ix_(perm, perm)], block_size)
         inv = np.empty(n, dtype=np.int64)
         inv[perm] = np.arange(n)
+        if filt.n_shifts > 1:
+            bells = tuple(
+                kref.bsr_from_dense(
+                    np.asarray(s.laplacian(), np.float64)[
+                        np.ix_(perm, perm)
+                    ],
+                    block_size,
+                )
+                for s in filt.shifts
+            )
+            return _BsrMultiState(
+                bells=bells, perm=perm, inv=inv, n=n, n_pad=bells[0].n
+            )
+        lap = np.asarray(g.laplacian(), np.float64)
+        bell = kref.bsr_from_dense(lap[np.ix_(perm, perm)], block_size)
         return _BsrState(bell=bell, perm=perm, inv=inv, n=n, n_pad=bell.n)
 
     def _forward(self, state: _BsrState, f):
@@ -267,6 +317,19 @@ class BsrBackend:
             interpret = jax.default_backend() != "tpu"
         kd = jnp.dtype(krylov_dtype or jnp.float32).name
         fp, squeeze = self._forward(state, f)
+        if isinstance(state, _BsrMultiState):
+            # Joint recurrence over the per-shift Block-ELL matvecs (the
+            # jnp reference oracle — the fused/stepwise Pallas kernels are
+            # single-shift; the joint path's inner level reuses them via
+            # cheb_apply's scan only in spirit, not in kernel).
+            out = chebyshev.cheb_apply_joint(
+                [self._bell_matvec(b, state.n_pad) for b in state.bells],
+                fp,
+                jnp.asarray(c, fp.dtype),
+                filt.shift_lmaxes,
+            )
+            out = out[:, state.inv]
+            return out[:, :, 0] if squeeze else out
         bell = state.bell
         tiling = autotune.select_tiling(
             state.n_pad, fp.shape[1], c.shape[0],
@@ -289,7 +352,17 @@ class BsrBackend:
         out = out[:, state.inv]
         return out[:, :, 0] if squeeze else out
 
-    def adjoint(self, filt, state: _BsrState, a, **_):
+    @staticmethod
+    def _bell_matvec(bell, n_pad: int):
+        """jnp Block-ELL matvec closure handling arbitrary trailing dims."""
+
+        def mv(v):
+            flat = v.reshape(n_pad, -1)
+            return kref.bsr_matvec_ref(bell, flat).reshape(v.shape)
+
+        return mv
+
+    def adjoint(self, filt, state, a, **_):
         # Adjoint = same recurrence on eta-stacked blocks (Sec. IV-B); the
         # matvec is the jnp Block-ELL oracle — adjoint traffic is a small
         # fraction of forward traffic, so it does not warrant a kernel.
@@ -298,17 +371,22 @@ class BsrBackend:
         a3 = a[:, :, None] if squeeze else a
         ap = jnp.zeros((a3.shape[0], state.n_pad) + a3.shape[2:], a3.dtype)
         ap = ap.at[:, : state.n].set(a3[:, state.perm])
-        bell = state.bell
-
-        def mv(v):  # v: (n_pad, [F,] eta) — flatten trailing for the oracle
-            flat = v.reshape(state.n_pad, -1)
-            return kref.bsr_matvec_ref(bell, flat).reshape(v.shape)
-
-        out = chebyshev.cheb_adjoint_apply(mv, ap, filt.coeffs, filt.lmax)
+        if isinstance(state, _BsrMultiState):
+            out = chebyshev.cheb_adjoint_apply_joint(
+                [self._bell_matvec(b, state.n_pad) for b in state.bells],
+                ap,
+                filt.coeffs,
+                filt.shift_lmaxes,
+            )
+        else:
+            mv = self._bell_matvec(state.bell, state.n_pad)
+            out = chebyshev.cheb_adjoint_apply(
+                mv, ap, filt.coeffs, filt.lmax
+            )
         out = out[state.inv]
         return out[:, 0] if squeeze else out
 
-    def messages_per_apply(self, filt, state, order: int) -> int:
+    def messages_per_apply(self, filt, state, matvec_counts) -> int:
         return 0  # single-chip: HBM traffic, not network words
 
 
@@ -323,8 +401,8 @@ class _ShardedBackendBase:
     name = "halo"
     state_key = "partition_plan"
     # scatter_signal/gather_signal round-trip through host numpy, so these
-    # backends cannot live inside a lax.scan body.
-    traceable = False
+    # backends cannot live inside a lax.scan body (traceable=False).
+    capabilities = BackendCapabilities()
     prepare_opts: frozenset[str] = frozenset({"mesh", "axis", "n_parts"})
 
     def prepare(
@@ -339,23 +417,38 @@ class _ShardedBackendBase:
         g = _require_graph(filt, self.name)
         if mesh is None:
             mesh = _default_mesh(axis, n_parts)
+        if filt.n_shifts > 1:
+            # One layout from the union edge pattern, one plan per shift.
+            plans = build_shift_partition_plans(
+                [s.adjacency for s in filt.shifts],
+                g.coords,
+                mesh.shape[axis],
+            )
+            return MultiShiftGraphContext(
+                plans=plans, mesh=mesh, axis=axis,
+                lmaxes=filt.shift_lmaxes,
+            )
         plan = build_partition_plan(
             g.adjacency, g.coords, mesh.shape[axis]
         )
         return DistributedGraphContext(plan=plan, mesh=mesh, axis=axis)
 
-    def apply(self, filt, ctx: DistributedGraphContext, f, *, coeffs=None,
-              overlap: bool = True, **_):
+    def apply(self, filt, ctx, f, *, coeffs=None, overlap: bool = True, **_):
         c = _coeffs_or(filt, coeffs)
         f = jnp.asarray(f)
         squeeze = f.ndim == 1
         sharded = ctx.scatter_signal(f)
-        out = ctx.cheb_apply(sharded, c, filt.lmax, backend=self.name,
-                             overlap=overlap)
+        if isinstance(ctx, MultiShiftGraphContext):
+            # Joint recurrence: per-shift halo exchange inside one
+            # shard_map program (serial exchange->matvec per shift; the
+            # overlapped schedule remains single-shift only).
+            out = ctx.cheb_apply_joint(sharded, c)
+        else:
+            out = ctx.cheb_apply(sharded, c, filt.lmax, backend=self.name, overlap=overlap)
         out = jnp.asarray(ctx.gather_signal(np.asarray(out)))
         return out[:, :, 0] if squeeze else out
 
-    def adjoint(self, filt, ctx: DistributedGraphContext, a, **_):
+    def adjoint(self, filt, ctx, a, **_):
         a = jnp.asarray(a)
         squeeze = a.ndim == 2
         a3 = a[:, :, None] if squeeze else a
@@ -369,12 +462,17 @@ class _ShardedBackendBase:
             axis=1,
         )
         ap = jax.device_put(ap, NamedSharding(ctx.mesh, P(None, ctx.axis)))
-        out = ctx.cheb_adjoint(ap, filt.coeffs, filt.lmax)
+        if isinstance(ctx, MultiShiftGraphContext):
+            out = ctx.cheb_adjoint_joint(ap, filt.coeffs)
+        else:
+            out = ctx.cheb_adjoint(ap, filt.coeffs, filt.lmax)
         out = jnp.asarray(ctx.gather_signal(np.asarray(out)))
         return out[:, 0] if squeeze else out
 
-    def messages_per_apply(self, filt, ctx, order: int) -> int:
-        return ctx.messages_per_apply(order, backend=self.name)
+    def messages_per_apply(self, filt, ctx, matvec_counts) -> int:
+        if isinstance(ctx, MultiShiftGraphContext):
+            return ctx.messages_per_apply(matvec_counts)
+        return ctx.messages_per_apply(matvec_counts[0], backend=self.name)
 
 
 @register_backend
@@ -392,9 +490,17 @@ class HaloBackend(_ShardedBackendBase):
     exchange, then computes the interior rows while the collective is in
     flight. ``overlap=False`` selects the serial exchange->matvec
     reference; both move exactly the same words.
+
+    Multi-shift filters run here too: ``prepare`` builds one partition
+    plan per shift over a shared union layout
+    (:func:`repro.core.distributed.build_shift_partition_plans`) and the
+    joint recurrence exchanges each shift's own halo, so
+    ``messages_per_apply`` becomes the per-shift sum
+    ``sum_r count_r * halo_words_r``.
     """
 
     name = "halo"
+    capabilities = BackendCapabilities(multi_shift=True)
 
 
 @register_backend
@@ -403,10 +509,13 @@ class AllgatherBackend(_ShardedBackendBase):
 
     Words per apply = ``M * n_local * P * (P-1)`` — the §Perf "before"
     configuration that the halo backend's partition-boundary exchange
-    replaces.
+    replaces. Single-shift only (``multi_shift=False``): a baseline that
+    ships whole slabs regardless of the cut has nothing per-shift to
+    account, so multi-shift filters are rejected loudly at dispatch.
     """
 
     name = "allgather"
+    capabilities = BackendCapabilities()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -436,8 +545,9 @@ class GridBackend:
 
     name = "grid"
     # apply/adjoint place inputs with device_put before entering the jitted
-    # shard_map program — a host-side staging step; keep it out of scan.
-    traceable = False
+    # shard_map program — a host-side staging step; keep it out of scan
+    # (traceable=False). Single-shift only: the stencil IS the shift.
+    capabilities = BackendCapabilities()
     prepare_opts: frozenset[str] = frozenset(
         {"mesh", "axis", "n_parts", "depth"}
     )
@@ -511,32 +621,36 @@ class GridBackend:
         def local_adjoint(a_loc, c):
             def mv(v):  # (n_local, [F,] eta) — flatten for the stencil
                 flat = v.reshape(v.shape[0], -1)
-                out = grid_slab_matvec(
-                    flat, side=side, axis_names=(axis,), n_parts=p,
-                )
+                out = grid_slab_matvec(flat, side=side, axis_names=(axis,), n_parts=p)
                 return out.reshape(v.shape)
 
-            return chebyshev.cheb_adjoint_apply(
-                mv, a_loc, jnp.asarray(c, a_loc.dtype), lmax)
+            return chebyshev.cheb_adjoint_apply(mv, a_loc, jnp.asarray(c, a_loc.dtype), lmax)
 
-        adjoint_fn = jax.jit(shard_map(
-            local_adjoint, mesh=mesh,
-            in_specs=(P(None, axis), P(None, None)),
-            out_specs=P(axis),
-        ))
+        adjoint_fn = jax.jit(
+            shard_map(
+                local_adjoint,
+                mesh=mesh,
+                in_specs=(P(None, axis), P(None, None)),
+                out_specs=P(axis),
+            )
+        )
 
-        return _GridState(side=side, mesh=mesh, axis=axis, n_parts=p,
-                          depth=depth, apply_fn=apply_fn,
-                          adjoint_fn=adjoint_fn)
+        return _GridState(
+            side=side,
+            mesh=mesh,
+            axis=axis,
+            n_parts=p,
+            depth=depth,
+            apply_fn=apply_fn,
+            adjoint_fn=adjoint_fn,
+        )
 
     def apply(self, filt, state: _GridState, f, *, coeffs=None, **_):
         c = jnp.asarray(_coeffs_or(filt, coeffs), jnp.float32)
         f = jnp.asarray(f)
         squeeze = f.ndim == 1
         f2 = f[:, None] if squeeze else f
-        f2 = jax.device_put(
-            f2, NamedSharding(state.mesh, P(state.axis))
-        )
+        f2 = jax.device_put(f2, NamedSharding(state.mesh, P(state.axis)))
         out = state.apply_fn(f2, c)
         return out[:, :, 0] if squeeze else out
 
@@ -544,13 +658,11 @@ class GridBackend:
         a = jnp.asarray(a)
         squeeze = a.ndim == 2
         a3 = a[:, :, None] if squeeze else a
-        a3 = jax.device_put(
-            a3, NamedSharding(state.mesh, P(None, state.axis))
-        )
+        a3 = jax.device_put(a3, NamedSharding(state.mesh, P(None, state.axis)))
         out = state.adjoint_fn(a3, jnp.asarray(filt.coeffs, jnp.float32))
         return out[:, 0] if squeeze else out
 
-    def messages_per_apply(self, filt, state: _GridState, order: int) -> int:
+    def messages_per_apply(self, filt, state: _GridState, matvec_counts) -> int:
         # one (side,) boundary row up + down per order across P-1 seams;
         # the CA schedule moves the same words in order/depth rounds.
-        return order * 2 * (state.n_parts - 1) * state.side
+        return matvec_counts[0] * 2 * (state.n_parts - 1) * state.side

@@ -4,7 +4,9 @@ The paper's Sec. V-C denoising, inverse filtering (arXiv:2003.11152) and
 graph Wiener reconstruction (arXiv:2205.04019) are all iterations whose
 every step is a Chebyshev-recurrence filter call — so they run on any
 registered backend, with communication accounted by the backend's
-``messages_per_apply`` model. See DESIGN.md Sec. 7.
+``messages_per_apply`` model. See DESIGN.md Sec. 7 and (for the Chebyshev
+inverse approximation behind ``cheb_inverse`` / ``cheb_preconditioner``,
+arXiv:2504.14341) Sec. 11.
 
 Quickstart::
 
@@ -16,6 +18,11 @@ Quickstart::
 """
 
 from repro.solvers.api import GramProblem, LassoProblem, SolveResult
+from repro.solvers.inverse import (
+    ChebyshevPreconditioner,
+    cheb_inverse,
+    cheb_preconditioner,
+)
 from repro.solvers.iterative import (
     conjugate_gradient,
     fista,
@@ -27,9 +34,12 @@ from repro.solvers.iterative import (
 from repro.solvers.loops import iterate
 
 __all__ = [
+    "ChebyshevPreconditioner",
     "GramProblem",
     "LassoProblem",
     "SolveResult",
+    "cheb_inverse",
+    "cheb_preconditioner",
     "conjugate_gradient",
     "fista",
     "ista",

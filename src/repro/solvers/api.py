@@ -119,8 +119,7 @@ class LassoProblem:
         mu = jnp.asarray(self.mu, dtype=y.dtype)
         if mu.ndim == 0:
             mu = jnp.concatenate(
-                [jnp.zeros((1,), y.dtype),
-                 jnp.full((self.filt.eta - 1,), mu, y.dtype)]
+                [jnp.zeros((1,), y.dtype), jnp.full((self.filt.eta - 1,), mu, y.dtype)]
             )
         if mu.shape != (self.filt.eta,):
             raise ValueError(
@@ -129,13 +128,10 @@ class LassoProblem:
             )
         return mu.reshape((self.filt.eta,) + (1,) * y.ndim)
 
-    def objective(self, a: jax.Array, *, backend: str = "dense",
-                  **opts) -> float:
+    def objective(self, a: jax.Array, *, backend: str = "dense", **opts) -> float:
         """Exact lasso objective of coefficients ``a`` (one adjoint)."""
-        resid = jnp.asarray(self.y) - self.filt.adjoint(
-            a, backend=backend, **opts)
-        return float(0.5 * jnp.sum(resid * resid)
-                     + jnp.sum(self.mu_vector() * jnp.abs(a)))
+        resid = jnp.asarray(self.y) - self.filt.adjoint(a, backend=backend, **opts)
+        return float(0.5 * jnp.sum(resid * resid) + jnp.sum(self.mu_vector() * jnp.abs(a)))
 
     def messages_per_iteration(self, backend: str, **opts) -> int:
         """One length-1 forward + one length-eta adjoint per iteration
@@ -181,6 +177,8 @@ class GramProblem:
 
     def messages_per_iteration(self, backend: str, **opts) -> int:
         """One degree-2M gram filter per CG iteration: 4M|E| words in the
-        radio model (Sec. IV-C)."""
+        radio model (Sec. IV-C); per-shift doubled orders for multi-shift
+        filters (the gram tensor has shape ``(2M_1+1, ..., 2M_R+1)``)."""
         return self.filt.messages_per_apply(
-            2 * self.filt.order, backend=backend, **opts)
+            orders=tuple(2 * m for m in self.filt.orders), backend=backend, **opts
+        )

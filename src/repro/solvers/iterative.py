@@ -99,8 +99,7 @@ def _fista_machine(y, tau, fwd, adj, soft, l1):
         return (a, z_new, t_new, obj), (obj, stop)
 
     def init(a0):
-        return (a0, a0, jnp.asarray(1.0, y.dtype),
-                jnp.asarray(jnp.inf, y.dtype))
+        return (a0, a0, jnp.asarray(1.0, y.dtype), jnp.asarray(jnp.inf, y.dtype))
 
     def final(state):
         return state[0]
@@ -121,8 +120,7 @@ def _lasso_result(problem, state_a, hist, k, conv, method, backend, opts):
         converged=conv,
         method=method,
         backend=backend,
-        messages_per_iteration=problem.messages_per_iteration(
-            backend, **opts),
+        messages_per_iteration=problem.messages_per_iteration(backend, **opts),
     )
 
 
@@ -152,10 +150,9 @@ def ista(
 
     step, init, final = _ista_machine(y, tau, fwd, adj, soft, l1)
     state, hist, k, conv = iterate(
-        step, init(a0), n_iters=n_iters, tol=tol,
-        traceable=backend_is_traceable(backend))
-    return _lasso_result(problem, final(state), hist, k, conv, "ista",
-                         backend, opts)
+        step, init(a0), n_iters=n_iters, tol=tol, traceable=backend_is_traceable(backend)
+    )
+    return _lasso_result(problem, final(state), hist, k, conv, "ista", backend, opts)
 
 
 def fista(
@@ -183,10 +180,9 @@ def fista(
 
     step, init, final = _fista_machine(y, tau, fwd, adj, soft, l1)
     state, hist, k, conv = iterate(
-        step, init(a0), n_iters=n_iters, tol=tol,
-        traceable=backend_is_traceable(backend))
-    return _lasso_result(problem, final(state), hist, k, conv, "fista",
-                         backend, opts)
+        step, init(a0), n_iters=n_iters, tol=tol, traceable=backend_is_traceable(backend)
+    )
+    return _lasso_result(problem, final(state), hist, k, conv, "fista", backend, opts)
 
 
 def _colsum(u: jax.Array, v: jax.Array) -> jax.Array:
@@ -201,6 +197,7 @@ def conjugate_gradient(
     n_iters: int = 50,
     tol: float | None = 1e-6,
     backend: str = "dense",
+    preconditioner=None,
     **opts,
 ) -> SolveResult:
     """CG on ``(Phi~* Phi~ + reg I) x = b`` — distributed inverse
@@ -212,6 +209,18 @@ def conjugate_gradient(
     independent systems: step sizes are computed per column, and the
     tolerance applies to the worst column's relative residual. History
     records that worst-column residual norm.
+
+    ``preconditioner=`` enables PCG: a callable ``r -> M^{-1} r`` applied
+    once per iteration — canonically a
+    :class:`repro.solvers.ChebyshevPreconditioner` (built by
+    :func:`repro.solvers.cheb_preconditioner`), which applies a low-order
+    polynomial fit of ``1/(h + reg)`` and therefore clusters the
+    preconditioned spectrum around 1, collapsing iterations-to-tolerance.
+    When the preconditioner declares per-shift ``orders`` its words are
+    added to ``messages_per_iteration``, so ``messages_total`` compares
+    fairly against plain CG. The convergence/tolerance bookkeeping stays
+    in the TRUE residual ``r`` (not the preconditioned one), so histories
+    of plain and preconditioned runs are directly comparable.
     """
     b = jnp.asarray(problem.b)
     mv = problem.operator(backend, **opts)
@@ -219,33 +228,39 @@ def conjugate_gradient(
     r = b - mv(x)
     bnorm = jnp.maximum(jnp.sqrt(_colsum(b, b)), 1e-30)
     eps = jnp.asarray(1e-30, b.dtype)
+    precond = preconditioner if preconditioner is not None else (lambda v: v)
 
     def step(state):
-        x, r, p, rs = state
+        x, r, p, rz = state
         ap = mv(p)
-        alpha = rs / jnp.maximum(_colsum(p, ap), eps)
+        alpha = rz / jnp.maximum(_colsum(p, ap), eps)
         x = x + alpha * p
         r = r - alpha * ap
+        z = precond(r)
+        rz_new = _colsum(r, z)
+        p = z + (rz_new / jnp.maximum(rz, eps)) * p
         rs_new = _colsum(r, r)
-        p = r + (rs_new / jnp.maximum(rs, eps)) * p
         rel = jnp.sqrt(rs_new) / bnorm
-        return (x, r, p, rs_new), (jnp.max(jnp.sqrt(rs_new)),
-                                   jnp.max(rel))
+        return (x, r, p, rz_new), (jnp.max(jnp.sqrt(rs_new)), jnp.max(rel))
 
-    init = (x, r, r, _colsum(r, r))
+    z0 = precond(r)
+    init = (x, r, z0, _colsum(r, z0))
     (x, _, _, _), hist, k, conv = iterate(
-        step, init, n_iters=n_iters, tol=tol,
-        traceable=backend_is_traceable(backend))
+        step, init, n_iters=n_iters, tol=tol, traceable=backend_is_traceable(backend)
+    )
+    words = problem.messages_per_iteration(backend, **opts)
+    pre_orders = getattr(preconditioner, "orders", None)
+    if pre_orders is not None:
+        words += problem.filt.messages_per_apply(orders=pre_orders, backend=backend, **opts)
     return SolveResult(
         x=x,
         aux=None,
         history=hist,
         iterations=k,
         converged=conv,
-        method="cg",
+        method="cg" if preconditioner is None else "pcg",
         backend=backend,
-        messages_per_iteration=problem.messages_per_iteration(
-            backend, **opts),
+        messages_per_iteration=words,
     )
 
 
@@ -276,7 +291,12 @@ def wiener(
     """
     res = conjugate_gradient(
         GramProblem(filt=filt, b=y, reg=float(noise_power)),
-        x0=x0, n_iters=n_iters, tol=tol, backend=backend, **opts)
+        x0=x0,
+        n_iters=n_iters,
+        tol=tol,
+        backend=backend,
+        **opts,
+    )
     xhat = filt.gram(res.x, backend=backend, **opts)
     return dataclasses.replace(res, x=xhat, aux=res.x, method="wiener")
 
@@ -331,8 +351,7 @@ def lasso_panel_program(
             state, (trace, _stop) = stepf(state)
             return state, jnp.asarray(trace, jnp.float32)
 
-        state, hist = jax.lax.scan(body, init(fwd(y2)), None,
-                                   length=n_iters)
+        state, hist = jax.lax.scan(body, init(fwd(y2)), None, length=n_iters)
         a = final(state)
         return filt.adjoint(a, backend=backend, **opts), a, hist
 

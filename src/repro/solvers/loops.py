@@ -97,12 +97,10 @@ def _while_loop(step, init, n_iters, tol):
         return state, k + 1, hist, jnp.asarray(stop, jnp.float32)
 
     state, k, hist, stop = jax.lax.while_loop(
-        cond, body, (init, jnp.asarray(0), hist0, jnp.asarray(jnp.inf,
-                                                              jnp.float32))
+        cond, body, (init, jnp.asarray(0), hist0, jnp.asarray(jnp.inf, jnp.float32))
     )
     k = int(k)
-    return (state, np.asarray(hist, np.float64)[:k], k,
-            bool(stop <= tol))
+    return (state, np.asarray(hist, np.float64)[:k], k, bool(stop <= tol))
 
 
 def _host_loop(step, init, n_iters, tol):

@@ -1,4 +1,4 @@
-"""Paper Sec. V application behaviour tests (centralized matvec)."""
+"""Paper Sec. V application behaviour tests (centralized dense backend)."""
 
 import jax
 import jax.numpy as jnp
@@ -21,43 +21,42 @@ def setting():
     g = graph.connected_sensor_graph(kg, n=250, sigma=0.105, kappa=0.11)
     f0 = g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2 - 1.0
     y = f0 + 0.5 * jax.random.normal(kn, f0.shape)
-    lap = g.laplacian()
-    return g, f0, y, (lambda v: lap @ v), float(g.lmax_bound())
+    return g, f0, y, float(g.lmax_bound())
 
 
 def test_tikhonov_denoising_improves_mse(setting):
-    g, f0, y, mv, lmax = setting
-    fhat = denoise_tikhonov(mv, y, lmax, tau=1.0, r=1, order=20)
+    g, f0, y, lmax = setting
+    fhat = denoise_tikhonov(g, y, lmax, tau=1.0, r=1, order=20)
     noisy = float(jnp.mean((y - f0) ** 2))
     den = float(jnp.mean((fhat - f0) ** 2))
     assert den < 0.2 * noisy, (noisy, den)
 
 
 def test_tikhonov_r2_also_denoises(setting):
-    g, f0, y, mv, lmax = setting
-    fhat = denoise_tikhonov(mv, y, lmax, tau=1.0, r=2, order=40)
+    g, f0, y, lmax = setting
+    fhat = denoise_tikhonov(g, y, lmax, tau=1.0, r=2, order=40)
     assert float(jnp.mean((fhat - f0) ** 2)) < float(jnp.mean((y - f0) ** 2))
 
 
 def test_heat_smoothing_attenuates_noise(setting):
-    g, f0, y, mv, lmax = setting
-    sm = smooth_heat(mv, y, lmax, t=2.0, order=20)
+    g, f0, y, lmax = setting
+    sm = smooth_heat(g, y, lmax, t=2.0, order=20)
     assert float(jnp.mean((sm - f0) ** 2)) < float(jnp.mean((y - f0) ** 2))
 
 
 def test_ssl_classification_beats_chance(setting):
-    g, f0, y, mv, lmax = setting
+    g, f0, y, lmax = setting
     true = jnp.where(f0 >= jnp.median(f0), 1.0, -1.0)
     mask = jax.random.uniform(jax.random.PRNGKey(3), f0.shape) < 0.15
-    pred = ssl_classify(mv, jnp.where(mask, true, 0.0), lmax)
+    pred = ssl_classify(g, jnp.where(mask, true, 0.0), lmax)
     acc = float(jnp.mean((pred == true)[~mask]))
     assert acc > 0.8, acc
 
 
 def test_wavelet_ista_denoises_and_sparsifies(setting):
-    g, f0, y, mv, lmax = setting
+    g, f0, y, lmax = setting
     fhat, coeffs = wavelet_denoise_ista(
-        mv, y, lmax, n_scales=3, order=20, mu=2.0, n_iters=30)
+        g, y, lmax, n_scales=3, order=20, mu=2.0, n_iters=30)
     noisy = float(jnp.mean((y - f0) ** 2))
     den = float(jnp.mean((fhat - f0) ** 2))
     assert den < noisy, (noisy, den)
@@ -68,11 +67,11 @@ def test_wavelet_ista_denoises_and_sparsifies(setting):
 
 def test_wavelet_ista_objective_decreases(setting):
     # The ISTA iterates must not increase the lasso objective.
-    g, f0, y, mv, lmax = setting
+    g, f0, y, lmax = setting
 
     def objective(n_iters):
         fhat, a = wavelet_denoise_ista(
-            mv, y, lmax, n_scales=3, order=20, mu=2.0, n_iters=n_iters)
+            g, y, lmax, n_scales=3, order=20, mu=2.0, n_iters=n_iters)
         resid = y - fhat
         # Weighted lasso: scalar mu penalizes wavelet bands only (band 0 is
         # the unpenalized scaling band — see wavelet_denoise_ista).

@@ -5,6 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import chebyshev, graph, multipliers, operators
+from repro.filters import GraphFilter
 
 import pytest
 
@@ -70,10 +71,10 @@ def test_cheb_eval_roundtrip():
 ])
 def test_apply_converges_to_oracle(sensor, lap, mult, order, tol):
     lmax = float(sensor.lmax_bound())
-    op = operators.UnionFilterOperator.from_multipliers([mult], order, lmax)
+    op = GraphFilter.from_multipliers([mult], order, graph=sensor, lmax=lmax)
     f = np.asarray(jax.random.normal(jax.random.PRNGKey(1), (lap.shape[0],)))
     exact = operators.exact_union_apply(lap, [mult], f)
-    approx = op.apply_dense(jnp.asarray(lap), jnp.asarray(f))
+    approx = op.apply(jnp.asarray(f), backend="dense")
     err = np.max(np.abs(np.asarray(approx) - exact)) / np.max(np.abs(exact))
     assert err < tol, f"relative error {err}"
 
@@ -81,14 +82,14 @@ def test_apply_converges_to_oracle(sensor, lap, mult, order, tol):
 def test_union_shares_recurrence_and_matches_stacked(sensor, lap):
     lmax = float(sensor.lmax_bound())
     bank = [multipliers.heat(0.5), multipliers.heat(2.0), multipliers.tikhonov()]
-    op = operators.UnionFilterOperator.from_multipliers(bank, 30, lmax)
+    op = GraphFilter.from_multipliers(bank, 30, graph=sensor, lmax=lmax)
     f = np.asarray(jax.random.normal(jax.random.PRNGKey(2), (lap.shape[0],)))
-    out = np.asarray(op.apply_dense(jnp.asarray(lap), jnp.asarray(f)))
+    out = np.asarray(op.apply(jnp.asarray(f), backend="dense"))
     assert out.shape == (3, lap.shape[0])
     for j, g in enumerate(bank):
-        single = operators.UnionFilterOperator.from_multipliers([g], 30, lmax)
+        single = GraphFilter.from_multipliers([g], 30, graph=sensor, lmax=lmax)
         np.testing.assert_allclose(
-            out[j], np.asarray(single.apply_dense(jnp.asarray(lap), jnp.asarray(f)))[0],
+            out[j], np.asarray(single.apply(jnp.asarray(f), backend="dense"))[0],
             atol=1e-10)
 
 
@@ -96,12 +97,12 @@ def test_adjoint_inner_product_identity(sensor, lap):
     # <Phi~ f, a> == <f, Phi~* a> exactly (same polynomial, symmetric L).
     lmax = float(sensor.lmax_bound())
     bank = multipliers.sgwt_filter_bank(lmax, n_scales=3)
-    op = operators.UnionFilterOperator.from_multipliers(bank, 25, lmax)
+    op = GraphFilter.from_multipliers(bank, 25, graph=sensor, lmax=lmax)
     n = lap.shape[0]
     f = jax.random.normal(jax.random.PRNGKey(3), (n,))
     a = jax.random.normal(jax.random.PRNGKey(4), (op.eta, n))
-    lhs = jnp.vdot(op.apply_dense(jnp.asarray(lap), f), a)
-    rhs = jnp.vdot(f, op.adjoint_dense(jnp.asarray(lap), a))
+    lhs = jnp.vdot(op.apply(f, backend="dense"), a)
+    rhs = jnp.vdot(f, op.adjoint(a, backend="dense"))
     np.testing.assert_allclose(float(lhs), float(rhs), rtol=1e-10)
 
 
@@ -109,10 +110,10 @@ def test_gram_identity_matches_composition(sensor, lap):
     # Phi~* Phi~ f via degree-2M product coefficients == adjoint(apply(f)).
     lmax = float(sensor.lmax_bound())
     bank = multipliers.sgwt_filter_bank(lmax, n_scales=2)
-    op = operators.UnionFilterOperator.from_multipliers(bank, 20, lmax)
+    op = GraphFilter.from_multipliers(bank, 20, graph=sensor, lmax=lmax)
     f = jax.random.normal(jax.random.PRNGKey(5), (lap.shape[0],))
-    composed = op.adjoint_dense(jnp.asarray(lap), op.apply_dense(jnp.asarray(lap), f))
-    direct = op.gram_apply_dense(jnp.asarray(lap), f)
+    composed = op.adjoint(op.apply(f, backend="dense"), backend="dense")
+    direct = op.gram(f, backend="dense")
     np.testing.assert_allclose(np.asarray(direct), np.asarray(composed), atol=1e-8)
 
 
@@ -129,11 +130,12 @@ def test_product_coefficients_identity():
 
 def test_batched_signals(sensor, lap):
     lmax = float(sensor.lmax_bound())
-    op = operators.UnionFilterOperator.from_multipliers([multipliers.heat(1.0)], 25, lmax)
+    op = GraphFilter.from_multipliers(
+        [multipliers.heat(1.0)], 25, graph=sensor, lmax=lmax)
     f = jax.random.normal(jax.random.PRNGKey(6), (lap.shape[0], 5))
-    out = op.apply_dense(jnp.asarray(lap), f)
+    out = op.apply(f, backend="dense")
     assert out.shape == (1, lap.shape[0], 5)
     for i in range(5):
-        single = op.apply_dense(jnp.asarray(lap), f[:, i])
+        single = op.apply(f[:, i], backend="dense")
         np.testing.assert_allclose(np.asarray(out[0, :, i]), np.asarray(single[0]),
                                    atol=1e-10)

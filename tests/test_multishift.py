@@ -1,0 +1,442 @@
+"""Multi-shift joint filters, the capability protocol, ``bucket_size``
+pinned semantics, and the Chebyshev inverse-solver convergence gates.
+
+Acceptance contract (PR 9): two-shift filters on a time-vertex product
+graph match the kron eigendecomposition oracle within 1e-5 on every
+``multi_shift`` backend (dense / bsr / halo, plus a forced-8-device
+subprocess case); backends without the capability raise an error naming
+backend and capability; Chebyshev-preconditioned CG reaches 1e-6 in at
+most half the iterations (and fewer modeled words) of plain CG on the
+Sec. V-C benchmark system.
+"""
+
+import subprocess
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chebyshev, graph, multipliers
+from repro.core.distributed import build_partition_plan, build_shift_partition_plans
+from repro.filters import (
+    BackendCapabilities,
+    GraphFilter,
+    backend_capabilities,
+    backend_is_traceable,
+    backend_supports_multi_shift,
+    backend_supports_sparse,
+    bucket_size,
+    get_backend,
+    require_capability,
+    shift_matvec_counts,
+)
+from repro.solvers import (
+    GramProblem,
+    cheb_inverse,
+    cheb_preconditioner,
+    conjugate_gradient,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+
+MULTI_SHIFT_BACKENDS = ("dense", "bsr", "halo")
+
+
+# ------------------------------------------------- two-shift fixture --
+
+
+def _path_adjacency(t: int) -> np.ndarray:
+    a = np.zeros((t, t))
+    idx = np.arange(t - 1)
+    a[idx, idx + 1] = a[idx + 1, idx] = 1.0
+    return a
+
+
+@pytest.fixture(scope="module")
+def product_setting():
+    """Time-vertex Cartesian product: sensor graph x length-6 path.
+
+    Shift 1 is ``L_G (x) I_T`` (vertex axis), shift 2 ``I_N (x) L_T``
+    (time axis) — commuting by construction, the canonical multi-shift
+    instance (arXiv:2003.11152).
+    """
+    gs = graph.connected_sensor_graph(
+        jax.random.PRNGKey(7), n=24, sigma=0.45, kappa=0.5)
+    t = 6
+    ag = np.asarray(gs.adjacency, np.float64)
+    at = _path_adjacency(t)
+    n = ag.shape[0] * t
+    a1 = np.kron(ag, np.eye(t))
+    a2 = np.kron(np.eye(ag.shape[0]), at)
+    cg = np.asarray(gs.coords)
+    coords = np.column_stack([
+        np.repeat(cg, t, axis=0),
+        np.tile(np.arange(t) / t, ag.shape[0])[:, None],
+    ])
+    g1 = graph.SensorGraph(adjacency=jnp.asarray(a1),
+                           coords=jnp.asarray(coords))
+    g2 = graph.SensorGraph(adjacency=jnp.asarray(a2),
+                           coords=jnp.asarray(coords))
+    lm1, lm2 = float(g1.lmax_bound()), float(g2.lmax_bound())
+    cg1 = chebyshev.cheb_coefficients(
+        [multipliers.heat(0.6), multipliers.tikhonov(1.0, 1)], 8, lm1)
+    cg2 = chebyshev.cheb_coefficients([multipliers.heat(1.2)], 5, lm2)
+    coeffs = chebyshev.separable_joint_coefficients([cg1, cg2])
+    filt = GraphFilter.from_shifts([g1, g2], coeffs, lmaxes=[lm1, lm2])
+    f = jax.random.normal(jax.random.PRNGKey(8), (n,))
+    laps = (np.asarray(g1.laplacian(), np.float64),
+            np.asarray(g2.laplacian(), np.float64))
+    return filt, f, laps, (ag, at)
+
+
+def _kron_oracle(filt, f, ag, at):
+    """Exact two-shift apply via the kron eigenbasis (eq. 5/6 lifted)."""
+    lg = np.diag(np.asarray(ag).sum(1)) - ag
+    lt = np.diag(at.sum(1)) - at
+    wg, ug = np.linalg.eigh(lg)
+    wt, ut = np.linalg.eigh(lt)
+    u = np.kron(ug, ut)
+    # tensor-grid evaluations (i, j) line up with the kron index i*T + j
+    vals = chebyshev.cheb_eval_joint(
+        filt.coeffs, [np.maximum(wg, 0.0), np.maximum(wt, 0.0)],
+        list(filt.shift_lmaxes))
+    fe = u.T @ np.asarray(f, np.float64)
+    return np.stack([u @ (vals[j].reshape(-1) * fe)
+                     for j in range(filt.eta)])
+
+
+# ---------------------------------------------------- oracle parity --
+
+
+@pytest.mark.parametrize("backend", MULTI_SHIFT_BACKENDS)
+def test_two_shift_parity_vs_kron_eigh_oracle(product_setting, backend):
+    filt, f, _, (ag, at) = product_setting
+    want = _kron_oracle(filt, f, ag, at)
+    got = filt.apply(f, backend=backend)
+    assert got.shape == (filt.eta, f.shape[0])
+    err = np.max(np.abs(np.asarray(got, np.float64) - want))
+    assert err < 1e-5, f"{backend}: {err}"
+
+
+@pytest.mark.parametrize("backend", MULTI_SHIFT_BACKENDS)
+def test_two_shift_adjoint_inner_product(product_setting, backend):
+    filt, f, _, _ = product_setting
+    a = jax.random.normal(jax.random.PRNGKey(9), (filt.eta, f.shape[0]))
+    lhs = float(jnp.vdot(filt.apply(f, backend=backend), a))
+    rhs = float(jnp.vdot(f, filt.adjoint(a, backend=backend)))
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-5)
+
+
+@pytest.mark.parametrize("backend", MULTI_SHIFT_BACKENDS)
+def test_two_shift_gram_equals_composition(product_setting, backend):
+    filt, f, _, _ = product_setting
+    composed = filt.adjoint(filt.apply(f, backend=backend), backend=backend)
+    direct = filt.gram(f, backend=backend)
+    np.testing.assert_allclose(
+        np.asarray(direct), np.asarray(composed), rtol=5e-4, atol=5e-4)
+
+
+def test_two_shift_panel_matches_columns(product_setting):
+    filt, f, _, _ = product_setting
+    panel = jnp.stack([f, 2.0 * f, f - 1.0], axis=1)
+    out = filt.apply(panel, backend="dense")
+    for i in range(3):
+        np.testing.assert_allclose(
+            np.asarray(out[:, :, i]),
+            np.asarray(filt.apply(panel[:, i], backend="dense")),
+            rtol=1e-5, atol=1e-5)
+
+
+# ------------------------------------------- capability protocol --
+
+
+def test_multi_shift_capability_matrix():
+    want = {"dense": True, "bsr": True, "halo": True,
+            "allgather": False, "grid": False, "matvec": False}
+    for name, flag in want.items():
+        assert backend_supports_multi_shift(name) == flag, name
+        assert backend_capabilities(name).multi_shift == flag, name
+
+
+@pytest.mark.parametrize("backend", ["allgather", "grid", "matvec"])
+def test_unsupported_backends_raise_loudly(product_setting, backend):
+    filt, f, _, _ = product_setting
+    with pytest.raises(ValueError, match=rf"'{backend}'.*'multi_shift'"):
+        filt.apply(f, backend=backend)
+
+
+def test_capability_error_lists_supported_backends():
+    with pytest.raises(ValueError) as exc:
+        require_capability(get_backend("allgather"), "multi_shift")
+    msg = str(exc.value)
+    for name in MULTI_SHIFT_BACKENDS:
+        assert name in msg
+
+
+def test_unknown_capability_name_raises():
+    with pytest.raises(AttributeError):
+        require_capability(get_backend("dense"), "does_not_exist")
+
+
+def test_capabilities_record_is_frozen():
+    import dataclasses
+    caps = backend_capabilities("dense")
+    assert isinstance(caps, BackendCapabilities)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        caps.multi_shift = False
+
+
+def test_thin_accessors_mirror_capabilities():
+    from repro.filters import available_backends
+    for name in available_backends():
+        caps = backend_capabilities(name)
+        assert backend_is_traceable(name) == caps.traceable
+        assert backend_supports_sparse(name) == caps.sparse_input
+        assert backend_supports_multi_shift(name) == caps.multi_shift
+
+
+# -------------------------------------------- per-shift words model --
+
+
+def test_shift_matvec_counts_model():
+    assert shift_matvec_counts((20,)) == (20,)
+    assert shift_matvec_counts((4, 3)) == (4, 15)
+    assert shift_matvec_counts((2, 2, 2)) == (2, 6, 18)
+
+
+def test_messages_per_apply_is_per_shift_sum(product_setting):
+    """Words = sum_r count_r * halo_words_r with per-shift plans over one
+    shared layout (4 partitions, no devices needed for the model)."""
+    from repro.core.distributed import MultiShiftGraphContext
+    filt, _, _, _ = product_setting
+    plans = build_shift_partition_plans(
+        [np.asarray(s.adjacency) for s in filt.shifts],
+        np.asarray(filt.shifts[0].coords), 4)
+    counts = shift_matvec_counts(filt.orders)
+    want = sum(c * p.halo_words for c, p in zip(counts, plans))
+    ctx = MultiShiftGraphContext(
+        plans=tuple(plans), mesh=None, axis="i",
+        lmaxes=tuple(filt.shift_lmaxes))
+    assert ctx.messages_per_apply(counts) == want
+    assert plans[0].halo_words != plans[1].halo_words  # distinct per shift
+    # all plans share one layout
+    assert all(np.array_equal(p.order, plans[0].order) for p in plans)
+
+
+def test_single_shift_plan_unchanged_by_refactor(product_setting):
+    filt, _, _, _ = product_setting
+    g1 = filt.shifts[0]
+    plan = build_partition_plan(
+        np.asarray(g1.adjacency), np.asarray(g1.coords), 4)
+    plans = build_shift_partition_plans(
+        [np.asarray(s.adjacency) for s in filt.shifts],
+        np.asarray(g1.coords), 4)
+    assert plan.n_local == plans[0].n_local
+    assert plans[0].halo_words <= 2 * g1.n_edges
+
+
+# ------------------------------------------------ bucket_size fix --
+
+
+def test_bucket_size_ladder_and_pinned_cap():
+    assert bucket_size(0) == 32
+    assert bucket_size(100) == 128
+    assert bucket_size(33) == 64
+    # n > cap: the caller's clamp wins exactly, never rounded
+    assert bucket_size(100, 70) == 70
+    # non-power-of-two cap returned verbatim when the ladder crosses it
+    assert bucket_size(65, 70) == 70
+    assert bucket_size(40, 70) == 64
+    # cap < floor also beats the floor
+    assert bucket_size(5, 3) == 3
+
+
+def test_bucket_size_validation():
+    with pytest.raises(ValueError, match="n >= 0"):
+        bucket_size(-1)
+    with pytest.raises(ValueError, match="floor >= 1"):
+        bucket_size(4, floor=0)
+    with pytest.raises(ValueError, match="cap >= 1"):
+        bucket_size(4, 0)
+
+
+def test_bucket_size_serve_profile():
+    """The serving engine's call pattern: floor=min_bucket, cap=max_panel.
+
+    Regression for the n>cap pin: an overfull batch must quantize to the
+    scheduler's max_panel itself (one compiled program), not to a pow2
+    above it.
+    """
+    max_panel, min_bucket = 48, 4
+    sizes = [bucket_size(k, max_panel, floor=min_bucket)
+             for k in range(1, 60)]
+    assert all(b <= max_panel for b in sizes)
+    assert {bucket_size(k, max_panel, floor=min_bucket)
+            for k in (49, 55, 59)} == {48}
+    # the distinct program set stays a handful
+    assert len(set(sizes)) <= 6
+
+
+def test_bucket_size_stream_profile():
+    """The streaming delta path's pattern: cap = N (the full size)."""
+    n = 120  # not a power of two — must come back verbatim when crossed
+    assert bucket_size(119, n) == n
+    assert bucket_size(120, n) == n
+    assert bucket_size(64, n) == 64
+    assert bucket_size(200, n) == n  # reach can exceed N transiently
+
+
+# --------------------------------------- inverse-solver gates (V-C) --
+
+
+@pytest.fixture(scope="module")
+def sec_vc_gram():
+    key = jax.random.PRNGKey(42)
+    g = graph.connected_sensor_graph(key, n=500)
+    lmax = float(g.lmax_bound())
+    bank = multipliers.sgwt_filter_bank(lmax, n_scales=3)
+    filt = GraphFilter.from_multipliers(bank, 20, graph=g, lmax=lmax)
+    x_true = jax.random.normal(jax.random.PRNGKey(1), (g.n_vertices,))
+    b = filt.adjoint(filt.apply(x_true))
+    return g, filt, GramProblem(filt=filt, b=b, reg=1e-6)
+
+
+def test_pcg_halves_cg_iterations_and_words(sec_vc_gram):
+    """Acceptance: PCG reaches 1e-6 in <= 0.5x plain-CG iterations and
+    fewer total modeled words on the Sec. V-C system."""
+    g, filt, prob = sec_vc_gram
+    plain = conjugate_gradient(prob, n_iters=300, tol=1e-6)
+    assert plain.converged
+    pre = cheb_preconditioner(prob, order=32)
+    assert pre.rate < 1.0
+    pcg = conjugate_gradient(prob, n_iters=300, tol=1e-6,
+                             preconditioner=pre)
+    assert pcg.converged
+    assert pcg.iterations <= plain.iterations // 2, (
+        pcg.iterations, plain.iterations)
+    # words model on a 4-partition halo plan: gram vs gram + K per iter
+    plan = build_partition_plan(
+        np.asarray(g.adjacency), np.asarray(g.coords), 4)
+    per_gram = 2 * filt.order * plan.halo_words
+    per_pre = pre.orders[0] * plan.halo_words
+    words_plain = plain.iterations * per_gram
+    words_pcg = pcg.iterations * (per_gram + per_pre)
+    assert words_pcg < words_plain, (words_pcg, words_plain)
+    # both reach the same solution
+    np.testing.assert_allclose(
+        np.asarray(pcg.x), np.asarray(plain.x), rtol=1e-3, atol=1e-4)
+
+
+def test_cheb_inverse_converges_at_predicted_rate(sec_vc_gram):
+    _, filt, prob = sec_vc_gram
+    res = cheb_inverse(prob, order=16, n_iters=200, tol=1e-6)
+    assert res.converged
+    rate = res.aux.rate
+    assert rate < 1.0
+    # linear contraction: iterations bounded by the build-time prediction
+    predicted = int(np.ceil(np.log(1e-6) / np.log(rate))) + 5
+    assert res.iterations <= predicted, (res.iterations, predicted)
+    # solves the same system as CG
+    plain = conjugate_gradient(prob, n_iters=300, tol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(res.x), np.asarray(plain.x), rtol=1e-3, atol=1e-4)
+
+
+def test_preconditioner_escalates_to_spd_fit(sec_vc_gram):
+    """order=8 is indefinite on the sgwt gram; the fit must escalate
+    rather than hand PCG a non-SPD preconditioner."""
+    _, filt, prob = sec_vc_gram
+    pre = cheb_preconditioner(prob, order=8)
+    assert pre.orders[0] > 8
+    assert pre.rate < 1.0
+
+
+def test_preconditioner_raises_at_max_order(sec_vc_gram):
+    _, filt, prob = sec_vc_gram
+    with pytest.raises(ValueError, match="no SPD contracting fit"):
+        cheb_preconditioner(prob, order=4, max_order=4)
+
+
+def test_pcg_identity_preconditioner_matches_plain(product_setting):
+    filt, f, _, _ = product_setting
+    prob = GramProblem(filt=filt, b=f, reg=1e-3)
+    plain = conjugate_gradient(prob, n_iters=60, tol=1e-8)
+    pcg = conjugate_gradient(prob, n_iters=60, tol=1e-8,
+                             preconditioner=lambda v: v)
+    assert plain.method == "cg" and pcg.method == "pcg"
+    np.testing.assert_allclose(
+        np.asarray(pcg.x), np.asarray(plain.x), rtol=1e-5, atol=1e-6)
+
+
+def test_two_shift_pcg_converges(product_setting):
+    """The joint tensor fit preconditions a two-shift gram system."""
+    filt, f, _, _ = product_setting
+    prob = GramProblem(filt=filt, b=f, reg=1e-3)
+    pre = cheb_preconditioner(prob, order=6)
+    assert pre.rate < 1.0
+    assert len(pre.orders) == 2
+    res = conjugate_gradient(prob, n_iters=100, tol=1e-6,
+                             preconditioner=pre)
+    assert res.converged
+
+
+# -------------------------------------------- 8-device subprocess --
+
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.core import chebyshev, graph, multipliers
+from repro.filters import GraphFilter, shift_matvec_counts
+
+assert jax.device_count() == 8
+gs = graph.connected_sensor_graph(
+    jax.random.PRNGKey(7), n=24, sigma=0.45, kappa=0.5)
+t = 8
+ag = np.asarray(gs.adjacency, np.float64)
+at = np.zeros((t, t)); i = np.arange(t - 1)
+at[i, i + 1] = at[i + 1, i] = 1.0
+a1 = np.kron(ag, np.eye(t))
+a2 = np.kron(np.eye(ag.shape[0]), at)
+cg = np.asarray(gs.coords)
+coords = np.column_stack([
+    np.repeat(cg, t, axis=0),
+    np.tile(np.arange(t) / t, ag.shape[0])[:, None]])
+g1 = graph.SensorGraph(jnp.asarray(a1), jnp.asarray(coords))
+g2 = graph.SensorGraph(jnp.asarray(a2), jnp.asarray(coords))
+lm1, lm2 = float(g1.lmax_bound()), float(g2.lmax_bound())
+c1 = chebyshev.cheb_coefficients([multipliers.heat(0.6)], 7, lm1)
+c2 = chebyshev.cheb_coefficients([multipliers.heat(1.2)], 4, lm2)
+coeffs = chebyshev.separable_joint_coefficients([c1, c2])
+filt = GraphFilter.from_shifts([g1, g2], coeffs, lmaxes=[lm1, lm2])
+f = jax.random.normal(jax.random.PRNGKey(8), (a1.shape[0],))
+want = np.asarray(filt.apply(f, backend="dense"))
+got = np.asarray(filt.apply(f, backend="halo", n_parts=8))
+err = float(np.max(np.abs(got - want)))
+assert err < 1e-5, err
+counts = shift_matvec_counts(filt.orders)
+words = filt.messages_per_apply(backend="halo", n_parts=8)
+assert words > 0
+per = [filt.messages_per_apply(orders=(filt.orders[0], 0),
+                               backend="halo", n_parts=8),
+       filt.messages_per_apply(orders=(0, filt.orders[1]),
+                               backend="halo", n_parts=8)]
+print("OK", err, words, per)
+"""
+
+
+@pytest.mark.slow
+def test_two_shift_halo_8device_subprocess(tmp_path):
+    script = tmp_path / "two_shift_8dev.py"
+    script.write_text(_SUBPROCESS_SCRIPT)
+    env = {"PYTHONPATH": str(REPO / "src"), "PATH": "/usr/bin:/bin"}
+    proc = subprocess.run(
+        [sys.executable, str(script)],
+        capture_output=True, text=True, env=env, timeout=900, cwd=REPO)
+    assert proc.returncode == 0, proc.stderr[-2000:]
+    assert proc.stdout.startswith("OK")

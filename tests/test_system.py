@@ -33,8 +33,7 @@ def test_paper_headline_claim_single_trial():
     g = graph.connected_sensor_graph(kg, n=500)
     f0 = g.coords[:, 0] ** 2 + g.coords[:, 1] ** 2 - 1.0
     y = f0 + 0.5 * jax.random.normal(kn, f0.shape)
-    lap = g.laplacian()
-    fhat = denoise_tikhonov(lambda v: lap @ v, y, float(g.lmax_bound()))
+    fhat = denoise_tikhonov(g, y, float(g.lmax_bound()))
     noisy = float(jnp.mean((y - f0) ** 2))
     den = float(jnp.mean((fhat - f0) ** 2))
     assert den < 0.1 * noisy, (noisy, den)

@@ -157,21 +157,22 @@ def main() -> int:
     baseline = load_rows(baseline_path)
     fresh = load_rows(fresh_path)
     # Key rows: timings above the noise floor, plus every engine_* serving
-    # row and every churn_* row — those carry the north-star throughput /
-    # churn-acceptance claims, so their *existence* is always enforced;
-    # their ratio is only gated when the baseline timing clears the floor
-    # (sub-floor medians are noise at CI-runner resolution, same as
-    # everywhere else).
+    # row, every churn_* row, and every solver_precond_* row — those carry
+    # the north-star throughput / churn-acceptance / PCG-halving claims,
+    # so their *existence* is always enforced; their ratio is only gated
+    # when the baseline timing clears the floor (sub-floor medians are
+    # noise at CI-runner resolution, same as everywhere else).
     key_rows = {
         k: r
         for k, r in baseline.items()
         if r["median_ms"] >= args.min_ms
         or k[1].startswith("engine_")
         or k[1].startswith("churn_")
+        or k[1].startswith("solver_precond_")
     }
     print(
         f"perf gate: {len(key_rows)} key rows (baseline >= {args.min_ms} ms "
-        f"or engine_*/churn_*) of {len(baseline)} baseline rows; "
+        f"or engine_*/churn_*/solver_precond_*) of {len(baseline)} baseline rows; "
         f"threshold {args.threshold:.2f}x"
     )
 

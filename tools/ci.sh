@@ -32,6 +32,7 @@ python -m pip install -r requirements-dev.txt
 # subsystems land formatted); extend FORMAT_PATHS as older files get
 # reformatted rather than formatting the whole tree in one noise commit.
 FORMAT_PATHS=(src/repro/stream src/repro/serve src/repro/dynamic
+              src/repro/filters src/repro/solvers
               benchmarks/loadgen.py tools/bench_check.py)
 if python -m ruff --version >/dev/null 2>&1; then
   python -m ruff check .
