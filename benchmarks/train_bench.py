@@ -1,0 +1,261 @@
+"""8-device worker behind ``benchmarks.run`` ``tab_gossip`` / ``tab_train``.
+
+The bench driver itself runs on whatever devices the host exposes (one CPU
+device here), so every *measured* distributed number comes from this worker,
+spawned as a subprocess with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``:
+a real 8-device mesh running the real shard_map programs — timed steps, not
+analytic models.
+
+Two experiments, both on the smoke LM with the decentralized-DP train steps
+(DESIGN.md Sec. 12.5 documents what is emulated and what is measured):
+
+* **alpha experiment** — per-message launch latency ``ALPHA_MS`` injected by
+  ``StragglerInjector.gossip_round`` / ``.allreduce_barrier`` on every
+  device (the alpha term of the alpha-beta interconnect model; the beta
+  term — actual buffer movement — and all compute are real). The status-quo
+  per-leaf gossip pays alpha on ``2*n_leaves`` messages per round; the
+  bucketed pipeline on ``2*K``. This is the measurement behind the
+  ``train_gossip_overlap <= 0.8 x train_gossip_serial`` acceptance bit.
+
+* **delta (straggler) experiment** — alpha off, rank 0 late by ``DELTA_MS``
+  at every synchronisation event it serially gates: ``2*(P-1)`` ring phases
+  for the all-reduce barrier vs ``M - truncate`` recurrence rounds for
+  truncated gossip. Fewer gates -> smaller stall; the bit checks truncated
+  gossip beats the barrier on measured wall-clock.
+
+Emits one JSON object on the last stdout line: ``{"rows": [...], "meta": ...}``.
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import statistics
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import registry
+from repro.core import gossip
+from repro.core.compat import make_mesh, shard_map
+from repro.data import SyntheticTokenPipeline
+from repro.launch.donation import jit_train_step
+from repro.models import lm
+from repro.models.config import ParallelConfig
+from repro.optim import AdamWConfig, init_opt_state
+from repro.runtime.fault import StragglerInjector
+from repro.train import make_barrier_train_step, make_gossip_train_step
+
+ARCH = "codeqwen15_7b"
+SEQ = 64
+GLOBAL_BATCH = 8
+ORDER = 12
+BUCKETS = 4
+TRUNCATE = 4
+ALPHA_MS = 0.5     # per-message launch latency (alpha experiment)
+DELTA_MS = 40.0    # rank-0 lateness per gated sync event (delta experiment)
+
+ROWS: list[dict] = []
+
+
+def emit(name, us, derived, *, shape=None, messages=None):
+    ROWS.append({"name": name, "us": us, "derived": derived,
+                 "shape": shape, "messages": messages})
+
+
+def _median_step_us(step_fn, params, opt, batch, n):
+    """Median wall time of a donated (params, opt, batch) step chain."""
+    p, o, m = step_fn(params, opt, batch)          # compile + warmup
+    jax.block_until_ready(m["loss"])
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        p, o, m = step_fn(p, o, batch)
+        jax.block_until_ready(m["loss"])
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
+def bare_sync_rows(mesh, params, n_timed):
+    """Timed gossip-vs-allreduce sync of a gradient-sized tree on the
+    real mesh, plus executed-schedule word counts (f32 vs bf16)."""
+    d = mesh.shape["data"]
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    tree = jax.tree.map(lambda x: x.astype(jnp.float32), params)
+
+    def gossip_sync(t):
+        return gossip.chebyshev_gossip_mean(t, "data", d, order=ORDER)
+
+    def gossip_sync_bf16(t):
+        return gossip.chebyshev_gossip_mean(
+            t, "data", d, order=ORDER, payload_dtype="bfloat16")
+
+    def allreduce_sync(t):
+        return gossip.pair_allreduce_mean(t, "data")
+
+    def wrap(fn):
+        return jax.jit(shard_map(
+            fn, mesh=mesh, in_specs=(P(),), out_specs=P(),
+            axis_names={"data"}, check_vma=False))
+
+    g_jit, ar_jit = wrap(gossip_sync), wrap(allreduce_sync)
+    t_g = _timeit(g_jit, tree, n_timed)
+    t_ar = _timeit(ar_jit, tree, n_timed)
+
+    words_f32 = gossip.measured_ppermute_words(wrap(gossip_sync), tree)
+    words_bf16 = gossip.measured_ppermute_words(wrap(gossip_sync_bf16), tree)
+    analytic = gossip.gossip_message_words(ORDER, d, n_params) // d
+    ar_words = gossip.allreduce_message_words(d, n_params)
+    lam1, lmax = gossip.ring_spectrum_bounds(d)
+    contraction = gossip.consensus_contraction(ORDER, lam1, lmax)
+    halved = words_bf16 <= 0.55 * words_f32
+
+    emit(f"gossip_sync_p{d}", t_g,
+         f"order={ORDER};contraction={contraction:.1e}"
+         f";words_dev_measured={words_f32};words_dev_analytic={analytic}"
+         f";words_dev_bf16={words_bf16}"
+         f";accept_bf16_halves_words={int(halved)}",
+         shape=f"P{d}xN{n_params}", messages=ORDER * 2 * d)
+    emit(f"gossip_allreduce_p{d}", t_ar,
+         f"words_dev={ar_words};rounds={2 * (d - 1)}"
+         f";exact_mean=1",
+         shape=f"P{d}xN{n_params}", messages=2 * (d - 1) * d)
+
+
+def _timeit(fn, tree, n):
+    jax.block_until_ready(fn(tree))
+    ts = []
+    for _ in range(n):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(tree))
+        ts.append(time.perf_counter() - t0)
+    return statistics.median(ts) * 1e6
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    n_timed = 5 if args.full else 3
+    n_parity = 10 if args.full else 8
+
+    d = len(jax.devices())
+    mesh = make_mesh((d,), ("data",))
+    cfg = registry.get_smoke(ARCH)
+    optc = AdamWConfig(peak_lr=1e-3, warmup_steps=2, total_steps=64)
+    pipe = SyntheticTokenPipeline(cfg.vocab_size, SEQ, GLOBAL_BATCH)
+    batch = pipe.batch_at(0)
+
+    def init():
+        params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+        return params, init_opt_state(params, optc)
+
+    params0, _ = init()
+    n_leaves = len(jax.tree.leaves(params0))
+    n_params = sum(x.size for x in jax.tree.leaves(params0))
+
+    def par(**kw):
+        base = dict(attn_impl="naive", remat="none", grad_sync="gossip",
+                    gossip_order=ORDER, fsdp=False)
+        base.update(kw)
+        return ParallelConfig(**base)
+
+    bare_sync_rows(mesh, params0, n_timed)
+
+    # ---- alpha experiment: serial per-leaf vs bucketed pipeline --------
+    inj_serial = StragglerInjector(alpha_ms=ALPHA_MS)
+    step_serial = jit_train_step(make_gossip_train_step(
+        cfg, par(gossip_buckets=1, gossip_overlap=False), optc, None, mesh,
+        round_delay=inj_serial.gossip_round))
+    p, o = init()
+    t_serial = _median_step_us(step_serial, p, o, batch, n_timed)
+
+    inj_overlap = StragglerInjector(alpha_ms=ALPHA_MS)
+    step_overlap = jit_train_step(make_gossip_train_step(
+        cfg, par(gossip_buckets=BUCKETS, gossip_overlap=True), optc, None,
+        mesh, round_delay=inj_overlap.gossip_round))
+    p, o = init()
+    t_overlap = _median_step_us(step_overlap, p, o, batch, n_timed)
+
+    inj_ar = StragglerInjector(alpha_ms=ALPHA_MS)
+    step_ar = jit_train_step(make_barrier_train_step(
+        cfg, par(grad_sync="allreduce"), optc, None, mesh,
+        barrier_delay=inj_ar.allreduce_barrier))
+    p, o = init()
+    t_ar = _median_step_us(step_ar, p, o, batch, n_timed)
+
+    ratio = t_overlap / t_serial
+    emit("train_gossip_serial", t_serial,
+         f"alpha_ms={ALPHA_MS};leaves={n_leaves}"
+         f";msgs_per_round={2 * n_leaves};rounds={ORDER}",
+         shape=f"P{d}xN{n_params}", messages=ORDER * 2 * n_leaves)
+    emit("train_gossip_overlap", t_overlap,
+         f"alpha_ms={ALPHA_MS};buckets={BUCKETS}"
+         f";msgs_per_round={2 * BUCKETS};rounds={ORDER}"
+         f";ratio_vs_serial={ratio:.3f}"
+         f";accept_overlap_le_0p8={int(ratio <= 0.8)}",
+         shape=f"P{d}xN{n_params}", messages=ORDER * 2 * BUCKETS)
+
+    # ---- loss parity: gossip overlap vs exact all-reduce ----------------
+    inj_ar.alpha_ms = 0.0          # parity runs need no emulated latency
+    inj_overlap.alpha_ms = 0.0
+    pg, og = init()
+    pa, oa = init()
+    max_rel = 0.0
+    for s in range(n_parity):
+        b = pipe.batch_at(s)
+        pg, og, mg = step_overlap(pg, og, b)
+        pa, oa, ma = step_ar(pa, oa, b)
+        lg, la = float(mg["loss"]), float(ma["loss"])
+        max_rel = max(max_rel, abs(lg - la) / (abs(la) + 1e-8))
+    emit("train_allreduce", t_ar,
+         f"alpha_ms={ALPHA_MS};phases={2 * (d - 1)}"
+         f";parity_steps={n_parity};max_rel_loss_diff={max_rel:.2e}"
+         f";accept_loss_parity_2pct={int(max_rel < 0.02)}",
+         shape=f"P{d}xN{n_params}", messages=2 * (d - 1))
+
+    # ---- delta experiment: slow rank gates barrier phases vs rounds -----
+    inj_ar.rank_delay_ms = {0: DELTA_MS}
+    p, o = init()
+    t_ar_strag = _median_step_us(step_ar, p, o, batch, n_timed)
+
+    inj_trunc = StragglerInjector(alpha_ms=0.0, rank_delay_ms={0: DELTA_MS})
+    step_trunc = jit_train_step(make_gossip_train_step(
+        cfg, par(gossip_buckets=BUCKETS, gossip_overlap=True,
+                 gossip_truncate=TRUNCATE),
+        optc, None, mesh, round_delay=inj_trunc.gossip_round))
+    p, o = init()
+    t_trunc = _median_step_us(step_trunc, p, o, batch, n_timed)
+
+    lam1, lmax = gossip.ring_spectrum_bounds(d)
+    mg, dg = gossip.truncation_profile(ORDER, TRUNCATE, lam1, lmax)
+    wins = t_trunc < t_ar_strag
+    emit("train_straggler_allreduce", t_ar_strag,
+         f"delta_ms={DELTA_MS};gated_events={2 * (d - 1)}",
+         shape=f"P{d}xN{n_params}", messages=2 * (d - 1))
+    emit("train_straggler_gossip_trunc", t_trunc,
+         f"delta_ms={DELTA_MS};gated_events={ORDER - TRUNCATE}"
+         f";truncate={TRUNCATE};mean_gain={mg:.4f};disagree_gain={dg:.2e}"
+         f";accept_straggler_gossip_wins={int(wins)}",
+         shape=f"P{d}xN{n_params}", messages=(ORDER - TRUNCATE) * 2)
+
+    print(json.dumps({
+        "rows": ROWS,
+        "meta": {"devices": d, "arch": cfg.name, "seq": SEQ,
+                 "global_batch": GLOBAL_BATCH, "order": ORDER,
+                 "alpha_ms": ALPHA_MS, "delta_ms": DELTA_MS,
+                 "n_leaves": n_leaves, "n_params": n_params},
+    }), flush=True)
+
+
+if __name__ == "__main__":
+    main()

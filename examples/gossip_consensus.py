@@ -25,6 +25,8 @@ from jax.sharding import PartitionSpec as P  # noqa: E402
 
 from repro.core import compat, gossip  # noqa: E402
 from repro.core.compat import shard_map  # noqa: E402
+from repro.train import (  # noqa: E402
+    build_bucket_plan, pack_buckets, unpack_buckets)
 
 
 def main() -> None:
@@ -72,6 +74,44 @@ def main() -> None:
     print(f"ring all-reduce reference words = {ar_words}")
     print(f"required_order(P=8, eps=1e-3) = {gossip.required_order(8, 1e-3)}")
     print(f"required_order(P=16, eps=1e-3) = {gossip.required_order(16, 1e-3)}")
+
+    # ---- bucketed pipeline + bf16 payloads: measured, not modeled ------
+    # The training schedule packs the tree into K flat buckets (fewer,
+    # larger messages per round — train/buckets.py) and can round the
+    # exchanged copies to bf16. Words per device per sync are *measured*
+    # by walking the traced program's ppermutes (size-weighted, so bf16
+    # counts half) and cross-checked against the analytic model.
+    order = 12
+
+    def sync_bucketed(g, payload_dtype=None):
+        plan = build_bucket_plan(g, 2)
+        flats = pack_buckets(plan, g)
+        outs = [
+            gossip.chebyshev_gossip_mean(
+                f, "data", n_dev, order=order, payload_dtype=payload_dtype)
+            for f in flats
+        ]
+        return unpack_buckets(plan, outs)
+
+    print(f"\n{'schedule':>16} {'rel err':>12} {'words/dev':>12} "
+          f"{'analytic':>12}")
+    analytic = gossip.gossip_message_words(order, n_dev, n_params) // n_dev
+    init = float(jnp.sqrt(sum(
+        jnp.sum((grads[k] - exact_mean[k][None]) ** 2) for k in grads)))
+    for label, pdt in (("bucketed f32", None), ("bucketed bf16", "bfloat16")):
+        fn = shard_map(
+            functools.partial(sync_bucketed, payload_dtype=pdt),
+            mesh=mesh, in_specs=(P("data"),), out_specs=P("data"))
+        out = fn(grads)
+        err = float(jnp.sqrt(sum(
+            jnp.sum((out[k] - exact_mean[k][None]) ** 2) for k in grads)))
+        measured = gossip.measured_ppermute_words(fn, grads)
+        print(f"{label:>16} {err / init:12.2e} {measured:12d} {analytic:12d}")
+        if pdt is None:
+            assert measured == analytic, (measured, analytic)
+        else:
+            assert abs(measured - analytic / 2) <= 1, (measured, analytic)
+            assert err / init <= gossip.payload_roundoff_bound(order), err
     print("OK")
 
 

@@ -17,13 +17,19 @@ import jax
 
 from repro.checkpoint import CheckpointManager, latest_step, restore
 from repro.data import SyntheticTokenPipeline
+from repro.launch.donation import jit_train_step
 from repro.models import lm
 from repro.models.config import ModelConfig, ParallelConfig
 from repro.optim import AdamWConfig, init_opt_state
 from repro.runtime import run_with_restarts
-from repro.train import Trainer, make_train_step
+from repro.train import Trainer, make_gossip_train_step, make_train_step
 
 PRESETS = {
+    # seconds-scale CI smoke (pair with --grad-sync gossip and
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise the
+    # decentralized bucketed-gossip path end to end — tools/ci.sh does)
+    "tiny": dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                 d_ff=256, vocab_size=512, steps=3, batch=8, seq=32),
     # ~10M params: CPU-friendly end-to-end check
     "small": dict(n_layers=4, d_model=256, n_heads=8, n_kv_heads=4,
                   d_ff=1024, vocab_size=2048, steps=120, batch=8, seq=128),
@@ -37,6 +43,10 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--preset", default="small", choices=sorted(PRESETS))
     ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--grad-sync", default="allreduce",
+                    choices=["allreduce", "gossip"],
+                    help="gossip = decentralized DP over all local devices"
+                         " (bucketed Chebyshev-gossip gradient sync)")
     args = ap.parse_args()
     p = PRESETS[args.preset]
     steps = args.steps or p["steps"]
@@ -51,13 +61,24 @@ def main() -> None:
         lm.init(jax.random.PRNGKey(0), cfg)[0]))
     print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  steps={steps}")
 
-    par = ParallelConfig(attn_impl="naive", remat="none")
-    optc = AdamWConfig(peak_lr=3e-3, warmup_steps=steps // 10,
+    optc = AdamWConfig(peak_lr=3e-3, warmup_steps=max(steps // 10, 1),
                        total_steps=steps)
     pipe = SyntheticTokenPipeline(cfg.vocab_size, p["seq"], p["batch"])
     ckpt_dir = tempfile.mkdtemp(prefix="repro_train_")
     mgr = CheckpointManager(ckpt_dir, keep=2)
-    step_fn = jax.jit(make_train_step(cfg, par, optc))
+    if args.grad_sync == "gossip":
+        from repro.core.compat import make_mesh
+        n_dev = len(jax.devices())
+        par = ParallelConfig(attn_impl="naive", remat="none",
+                             grad_sync="gossip", gossip_buckets=4,
+                             gossip_overlap=True, fsdp=False)
+        mesh = make_mesh((n_dev,), ("data",))
+        step_fn = jit_train_step(
+            make_gossip_train_step(cfg, par, optc, None, mesh))
+        print(f"grad-sync: bucketed Chebyshev gossip over {n_dev} devices")
+    else:
+        par = ParallelConfig(attn_impl="naive", remat="none")
+        step_fn = jit_train_step(make_train_step(cfg, par, optc))
 
     def make_trainer(start_step):
         params, _ = lm.init(jax.random.PRNGKey(0), cfg)
@@ -84,7 +105,11 @@ def main() -> None:
             / result["wall_s"], 1),
         "ckpt_dir": ckpt_dir,
     }, indent=1))
-    assert last < first - 0.3, "loss should decrease measurably"
+    if steps >= 50:
+        assert last < first - 0.3, "loss should decrease measurably"
+    else:
+        # smoke runs: the loop completed and produced finite losses
+        assert all(l == l and l < 1e4 for l in losses), losses
     print("OK")
 
 

@@ -50,6 +50,12 @@ __all__ = [
     "ring_laplacian_matvec",
     "chebyshev_gossip_mean",
     "pair_allreduce_mean",
+    "truncation_profile",
+    "payload_roundoff_bound",
+    "gossip_message_words",
+    "gossip_message_bytes",
+    "allreduce_message_words",
+    "measured_ppermute_words",
 ]
 
 
@@ -125,19 +131,32 @@ def consensus_coefficients(order: int, lam1: float, lmax: float) -> np.ndarray:
     )
 
 
-def ring_laplacian_matvec(tree: Any, axis_name: str, axis_size: int) -> Any:
+def ring_laplacian_matvec(
+    tree: Any,
+    axis_name: str,
+    axis_size: int,
+    payload_dtype: Any | None = None,
+) -> Any:
     """Ring-Laplacian matvec on a pytree living one-copy-per-device.
 
     L x = 2 x - x_left - x_right, realised with two ``ppermute`` neighbour
     hops along ``axis_name`` (ICI-local on a TPU torus axis).
+
+    ``payload_dtype`` (e.g. ``"bfloat16"``) rounds the *exchanged* copies
+    only — the local term and all arithmetic stay in the leaf dtype,
+    mirroring the ``krylov_dtype`` convention of the Pallas kernels
+    (bf16 storage / f32 math). Halves the words each round moves over the
+    interconnect; see :func:`payload_roundoff_bound` for the error model.
     """
     fwd = [(i, (i + 1) % axis_size) for i in range(axis_size)]
     bwd = [((i + 1) % axis_size, i) for i in range(axis_size)]
+    pdt = None if payload_dtype is None else jnp.dtype(payload_dtype)
 
     def leaf(v):
-        left = jax.lax.ppermute(v, axis_name, fwd)
-        right = jax.lax.ppermute(v, axis_name, bwd)
-        return 2.0 * v - left - right
+        send = v if pdt is None or v.dtype == pdt else v.astype(pdt)
+        left = jax.lax.ppermute(send, axis_name, fwd)
+        right = jax.lax.ppermute(send, axis_name, bwd)
+        return 2.0 * v - left.astype(v.dtype) - right.astype(v.dtype)
 
     return jax.tree_util.tree_map(leaf, tree)
 
@@ -149,6 +168,11 @@ def chebyshev_gossip_mean(
     *,
     order: int | None = None,
     eps: float = 1e-3,
+    payload_dtype: Any | None = None,
+    truncate: int = 0,
+    round_delay: Any | None = None,
+    delay_salt: Any | None = None,
+    delay_messages: int | None = None,
 ) -> Any:
     """Approximate the across-device mean of ``tree`` by Chebyshev gossip.
 
@@ -156,44 +180,96 @@ def chebyshev_gossip_mean(
     ``axis_name`` is bound. ``order`` defaults to the smallest M achieving
     ``eps`` contraction of non-consensus energy.
 
-    Returns a pytree of the same structure whose value on every device is
-    within ``eps * ||disagreement||`` of the exact mean.
+    ``payload_dtype`` rounds only the exchanged neighbour copies (bf16
+    payloads / f32 accumulation — see :func:`ring_laplacian_matvec`);
+    ``truncate`` drops the *last* ``truncate`` recurrence rounds — the
+    bounded-staleness straggler escape hatch: the partial series is still
+    a usable (slightly biased) mean whose exact bias profile is
+    :func:`truncation_profile` (DESIGN.md Sec. 12.4). The full-order
+    result is within ``eps * ||disagreement||`` of the exact mean.
+
+    ``round_delay`` is the benchmark-harness hook for emulated interconnect
+    latency on hosts without a real NIC (DESIGN.md Sec. 12.5): a Python
+    callable ``(rank, round_k, n_messages) -> None`` invoked on every
+    device at the start of every recurrence round via ``pure_callback``
+    (typically ``runtime.fault.StragglerInjector.gossip_round``, which
+    sleeps). The callback argument set is made loop-variant (round index,
+    plus ``delay_salt`` when the sync itself sits inside an outer scan) so
+    XLA cannot hoist or CSE the injected sleeps out of the rounds. ``None``
+    (the default) traces no callback at all — zero hot-path cost.
+
+    ``delay_messages`` overrides the message count reported to the hook
+    (default ``2 * n_leaves``, this call's own sends per round). A caller
+    running several recurrence chains per sync (the bucketed pipeline)
+    attaches the hook to *one* chain with the round's aggregate count, so
+    the emulated per-message cost is charged once per round rather than
+    once per chain — host launch latency serialises per device either way,
+    and one callback per round keeps the host-callback overhead itself
+    identical across schedules being compared.
     """
     if axis_size == 1:
         return tree
     if order is None:
         order = required_order(axis_size, eps)
+    if not 0 <= truncate < order:
+        raise ValueError(
+            f"truncate={truncate} must satisfy 0 <= truncate < order={order}")
     lam1, lmax = ring_spectrum_bounds(axis_size)
-    coeffs = consensus_coefficients(order, lam1, lmax)[0]
+    coeffs = consensus_coefficients(order, lam1, lmax)[0][: order - truncate + 1]
 
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     dtype = leaves[0].dtype
     c = jnp.asarray(coeffs, dtype=dtype)
     alpha = jnp.asarray(lmax / 2.0, dtype=dtype)
 
-    mv = partial(ring_laplacian_matvec, axis_name=axis_name, axis_size=axis_size)
+    mv = partial(ring_laplacian_matvec, axis_name=axis_name,
+                 axis_size=axis_size, payload_dtype=payload_dtype)
 
-    def axpy(a, x, b, y):  # a*x + b*y, leafwise
-        return [a * xi + b * yi for xi, yi in zip(x, y)]
+    if round_delay is None:
+        def delayed(xs, k):
+            return xs
+    else:
+        n_messages = 2 * len(leaves) if delay_messages is None \
+            else delay_messages
+        salt = jnp.int32(0) if delay_salt is None else delay_salt
+
+        def _cb(rank, k, _salt):
+            round_delay(int(rank), int(k), n_messages)
+            return np.float32(0.0)
+
+        def delayed(xs, k):
+            rank = jax.lax.axis_index(axis_name)
+            tok = jax.pure_callback(
+                _cb, jax.ShapeDtypeStruct((), jnp.float32), rank, k, salt)
+            # tok == 0.0 exactly; the add is an identity that pins the
+            # callback (and its sleep) before this round's ppermutes.
+            return [x + tok.astype(x.dtype) for x in xs]
+
+    def axpy(a, x, b, y):  # a*x + b*y, leafwise, dtype-preserving
+        return [(a * xi + b * yi).astype(xi.dtype) for xi, yi in zip(x, y)]
 
     t0 = leaves
-    l_t0 = mv(t0)
-    t1 = [(lv - alpha * v) / alpha for lv, v in zip(l_t0, t0)]
+    l_t0 = mv(delayed(t0, jnp.int32(0)))
+    t1 = [((lv - alpha * v) / alpha).astype(v.dtype)
+          for lv, v in zip(l_t0, t0)]
     acc = axpy(0.5 * c[0], t0, c[1], t1)
 
     if len(coeffs) > 2:
 
-        def step(carry, ck):
+        def step(carry, ck_k):
+            ck, k = ck_k
             t_prev1, t_prev2, acc = carry
-            l_t = mv(t_prev1)
+            l_t = mv(delayed(t_prev1, k))
             t_k = [
-                (2.0 / alpha) * (lv - alpha * v) - v2
+                ((2.0 / alpha) * (lv - alpha * v) - v2).astype(v.dtype)
                 for lv, v, v2 in zip(l_t, t_prev1, t_prev2)
             ]
-            acc = [a + ck * t for a, t in zip(acc, t_k)]
+            acc = [(a + ck * t).astype(a.dtype) for a, t in zip(acc, t_k)]
             return (t_k, t_prev1, acc), None
 
-        (_, _, acc), _ = jax.lax.scan(step, (t1, t0, acc), c[2:])
+        (_, _, acc), _ = jax.lax.scan(
+            step, (t1, t0, acc),
+            (c[2:], jnp.arange(1, len(c) - 1, dtype=jnp.int32)))
 
     return jax.tree_util.tree_unflatten(treedef, acc)
 
@@ -206,12 +282,107 @@ def pair_allreduce_mean(tree: Any, axis_name: str) -> Any:
     )
 
 
+def truncation_profile(
+    order: int,
+    truncate: int,
+    lam1: float,
+    lmax: float,
+    grid: int = 4096,
+) -> tuple[float, float]:
+    """Exact bias profile of the ``truncate``-round-truncated consensus
+    polynomial ``p_t = c_0/2 + sum_{k<=M-r} c_k Tbar_k``.
+
+    Returns ``(mean_gain, disagreement_gain)``: the truncated output is
+    ``p_t(0) * mean + p_t(L) d`` with disagreement ``d``, so
+
+        ||out - mean||_2 <= |mean_gain - 1| ||mean||_2
+                            + disagreement_gain ||d||_2
+
+    where ``mean_gain = p_t(0)`` and ``disagreement_gain`` is the max of
+    ``|p_t|`` over the nonzero spectrum ``[lam1, lmax]`` (evaluated on a
+    dense grid — p_t is a degree M-r polynomial, so ``grid`` points pin
+    the sup to plotting accuracy). ``truncate=0`` recovers
+    ``(1.0, consensus_contraction(order, ...))`` up to quadrature.
+    """
+    if not 0 <= truncate < order:
+        raise ValueError(
+            f"truncate={truncate} must satisfy 0 <= truncate < order={order}")
+    coeffs = consensus_coefficients(order, lam1, lmax)[0][: order - truncate + 1]
+    mean_gain = float(chebyshev.cheb_eval(coeffs, np.array([0.0]), lmax)[0])
+    xs = np.linspace(lam1, lmax, grid)
+    disagreement_gain = float(
+        np.max(np.abs(chebyshev.cheb_eval(coeffs, xs, lmax))))
+    return mean_gain, disagreement_gain
+
+
+def payload_roundoff_bound(order: int) -> float:
+    """Documented relative error floor of bf16 gossip payloads.
+
+    Each round rounds the two exchanged copies to bf16 (8 mantissa bits,
+    unit roundoff ``2^-8``) while the local copy and all accumulation stay
+    f32, so a round perturbs the matvec by at most ``2 * 2^-8`` relative
+    to the exchanged magnitude; the recurrence keeps ``|Tbar_k| <= 1`` on
+    the spectrum, so perturbations add at most linearly over the M rounds
+    and the coefficient combine (``sum |c_k| <= 2`` for the minimax
+    consensus series). Bound: ``4 * M * 2^-8`` relative to ``||x||_2`` —
+    loose by design; observed errors sit ~10x under it (pinned by
+    tests/test_elastic_and_gossip.py).
+    """
+    return 4.0 * order * 2.0**-8
+
+
 def gossip_message_words(order: int, axis_size: int, n_params: int) -> int:
     """Scalar words moved per sync across all devices: each of the M orders
     exchanges the full vector with both ring neighbours (2 sends/device)."""
     return order * 2 * axis_size * n_params
 
 
+def gossip_message_bytes(
+    order: int,
+    axis_size: int,
+    n_params: int,
+    payload_dtype: Any = "float32",
+) -> int:
+    """Bytes per sync across all devices — the quantity bf16 payloads
+    halve (words stay the same; each word shrinks to 2 bytes)."""
+    itemsize = jnp.dtype(payload_dtype).itemsize
+    return gossip_message_words(order, axis_size, n_params) * itemsize
+
+
 def allreduce_message_words(axis_size: int, n_params: int) -> int:
     """Ring all-reduce reference: 2 (P-1)/P * n per device."""
     return int(2 * (axis_size - 1) * n_params)
+
+
+def measured_ppermute_words(fn, *args) -> int:
+    """Words per device a traced program actually exchanges: sum of
+    ``ppermute`` payload sizes in ``jax.make_jaxpr(fn)(*args)``.
+
+    This measures the *executed schedule* (whatever bucketing, payload
+    dtype, or truncation the program applies) rather than the analytic
+    model — the two are cross-checked in examples/gossip_consensus.py.
+    Payload words are size-weighted: a bf16 payload counts half an f32
+    word, so the number is directly comparable across payload dtypes.
+    """
+    jaxpr = jax.make_jaxpr(fn)(*args)
+    words = 0.0
+
+    def walk(jx, mult):
+        nonlocal words
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "ppermute":
+                v = eqn.invars[0].aval
+                words += mult * v.size * jnp.dtype(v.dtype).itemsize / 4.0
+                continue
+            # A scan body executes `length` times; every other nested
+            # jaxpr (pjit, shard_map, cond branches, ...) executes once.
+            inner_mult = mult * eqn.params.get("length", 1) \
+                if eqn.primitive.name == "scan" else mult
+            for sub in eqn.params.values():
+                for cand in (sub if isinstance(sub, (tuple, list)) else (sub,)):
+                    inner = getattr(cand, "jaxpr", cand)
+                    if hasattr(inner, "eqns"):
+                        walk(inner, inner_mult)
+
+    walk(jaxpr.jaxpr, 1)
+    return int(round(words))

@@ -458,7 +458,8 @@ class GraphFilter:
         return out[:, :, :k]
 
     def panel_program(
-        self, *, backend: str = "dense", coeffs=None, **opts
+        self, *, backend: str = "dense", coeffs=None, donate: bool = False,
+        **opts
     ) -> Callable[[jax.Array], jax.Array]:
         """Build a reusable fixed-shape apply program for a panel lane.
 
@@ -470,6 +471,13 @@ class GraphFilter:
         call). Non-traceable backends (halo/grid stage host transfers)
         return a plain callable; their compilation reuse lives in their
         own prepared state.
+
+        ``donate=True`` donates the panel input buffer to the program
+        (``launch.donation`` discipline): the serving engine packs a fresh
+        panel per batch and never touches it after the call, so XLA may
+        reuse that allocation for the (eta, N, F) output — the panel lane
+        stays allocation-stable at steady state. Callers that keep the
+        panel alive must leave the default.
         """
         be = self._backend(backend)
         state = self._backend_state(be, opts)
@@ -479,7 +487,7 @@ class GraphFilter:
             return be.apply(self, state, panel, coeffs=c, **opts)
 
         if be.capabilities.traceable:
-            return jax.jit(run)
+            return jax.jit(run, donate_argnums=(0,) if donate else ())
         return run
 
     def apply_sparse(

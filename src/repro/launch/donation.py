@@ -1,0 +1,41 @@
+"""Shared buffer-donation tables for jitted entry points.
+
+One place records which argument positions of each program kind are
+dead-on-entry so both the dry-run lowering harness (``launch.dryrun``) and
+the live entry points (``launch.train``, ``serve.async_engine``, the
+benchmark steps) agree: a train step consumes and replaces params +
+opt_state, a decode step consumes and replaces the KV cache, prefill
+consumes nothing it returns. Donating them makes the step
+allocation-stable — XLA reuses the donated buffers for the outputs
+instead of allocating a second copy of the model every step (on backends
+without aliasing support JAX still *deletes* the donated arrays, so the
+host-side discipline is identical everywhere; tests pin it via
+``Array.is_deleted``).
+
+Positions are relative to the canonical step signatures:
+
+    train:   (params, opt_state, batch)            -> params', opt_state', m
+    decode:  (params, batch, cache)                -> logits, cache'
+    prefill: (params, batch)                       -> logits
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["TRAIN_DONATE", "DECODE_DONATE", "PREFILL_DONATE",
+           "jit_train_step"]
+
+TRAIN_DONATE: tuple[int, ...] = (0, 1)
+DECODE_DONATE: tuple[int, ...] = (2,)
+PREFILL_DONATE: tuple[int, ...] = ()
+
+
+def jit_train_step(step_fn, *, donate: bool = True, **jit_kwargs):
+    """``jax.jit`` a canonical train step with the params/opt_state
+    donation table applied (pass ``donate=False`` for debugging flows
+    that need to keep the pre-step arrays alive)."""
+    return jax.jit(
+        step_fn,
+        donate_argnums=TRAIN_DONATE if donate else (),
+        **jit_kwargs)

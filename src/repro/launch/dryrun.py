@@ -37,6 +37,8 @@ from repro.launch.hlo_weighted import analyze_hlo
 from repro.launch.cells import (
     CELLS, FRONTEND, cell_skip_reason, default_parallel, shape_with_frontend,
 )
+from repro.launch.donation import (DECODE_DONATE, PREFILL_DONATE,
+                                   TRAIN_DONATE)
 from repro.launch.mesh import axis_sizes, make_production_mesh
 from repro.models import lm
 from repro.models.config import ALL_SHAPES, ModelConfig, ParallelConfig
@@ -156,7 +158,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
             step = make_train_step(cfg, par, optc, rules)
         args = (p_shapes, o_shapes, batch_specs)
         shardings = (p_shard, o_shard, b_shard)
-        donate = (0, 1)
+        donate = TRAIN_DONATE
         tokens = shape.global_batch * shape.seq_len
         model_flops = H.model_flops_train(n_active, tokens)
     elif shape.kind == "prefill":
@@ -168,7 +170,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
         b_shard = _batch_shardings(batch_specs, mesh, rules)
         args = (p_shapes, batch_specs)
         shardings = (p_shard, b_shard)
-        donate = ()
+        donate = PREFILL_DONATE
         model_flops = H.model_flops_infer(
             n_active, shape.global_batch * shape.seq_len)
     else:  # decode
@@ -188,7 +190,7 @@ def build_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
                                   rules)
         args = (p_shapes, batch_specs, c_shapes)
         shardings = (p_shard, t_shard, c_shard)
-        donate = (2,)
+        donate = DECODE_DONATE
         model_flops = H.model_flops_infer(n_active, shape.global_batch)
 
     meta = {

@@ -21,11 +21,13 @@ import jax
 from repro.checkpoint import CheckpointManager, latest_step, restore
 from repro.configs import registry
 from repro.data import SyntheticTokenPipeline
+from repro.launch.donation import jit_train_step
 from repro.models import lm
 from repro.models.config import ParallelConfig
 from repro.optim import AdamWConfig, init_opt_state
 from repro.runtime import run_with_restarts
-from repro.train import Trainer, make_train_step
+from repro.runtime.fault import StragglerMonitor
+from repro.train import Trainer, make_gossip_train_step, make_train_step
 
 
 def main() -> None:
@@ -45,6 +47,18 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=50)
     ap.add_argument("--grad-sync", default="allreduce",
                     choices=["allreduce", "gossip"])
+    ap.add_argument("--gossip-order", type=int, default=None)
+    ap.add_argument("--gossip-buckets", type=int, default=4,
+                    help="flat gradient buckets for the gossip pipeline")
+    ap.add_argument("--gossip-payload", default=None,
+                    choices=[None, "bfloat16", "float32"],
+                    help="wire dtype of gossip exchanges (math stays f32)")
+    ap.add_argument("--gossip-truncate", type=int, default=0,
+                    help="drop the last r gossip rounds (bounded staleness)")
+    ap.add_argument("--no-overlap", action="store_true",
+                    help="serial post-backward gossip (benchmark baseline)")
+    ap.add_argument("--no-donate", action="store_true",
+                    help="keep pre-step params/opt_state buffers alive")
     args = ap.parse_args()
 
     if args.dryrun:
@@ -61,12 +75,29 @@ def main() -> None:
 
     cfg = registry.get_smoke(args.arch) if args.smoke else registry.get(args.arch)
     par = ParallelConfig(attn_impl="naive", remat="none",
-                         grad_sync=args.grad_sync)
+                         grad_sync=args.grad_sync,
+                         gossip_order=args.gossip_order,
+                         gossip_buckets=args.gossip_buckets,
+                         gossip_overlap=not args.no_overlap,
+                         gossip_payload_dtype=args.gossip_payload,
+                         gossip_truncate=args.gossip_truncate,
+                         fsdp=args.grad_sync != "gossip")
     optc = AdamWConfig(peak_lr=args.lr, warmup_steps=max(args.steps // 10, 1),
                        total_steps=args.steps)
     pipe = SyntheticTokenPipeline(cfg.vocab_size, args.seq, args.batch)
     mgr = CheckpointManager(args.ckpt_dir, keep=3)
-    step_fn = jax.jit(make_train_step(cfg, par, optc))
+    if args.grad_sync == "gossip":
+        # Decentralized DP: replicate params, gossip the gradients over a
+        # 1-D data mesh covering all local devices.
+        from repro.core.compat import make_mesh
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev,), ("data",))
+        step_fn = jit_train_step(
+            make_gossip_train_step(cfg, par, optc, None, mesh),
+            donate=not args.no_donate)
+    else:
+        step_fn = jit_train_step(make_train_step(cfg, par, optc),
+                                 donate=not args.no_donate)
 
     def make_trainer(start_step: int) -> Trainer:
         params, _ = lm.init(jax.random.PRNGKey(0), cfg)
@@ -78,7 +109,8 @@ def main() -> None:
             print(f"resumed from step {start_step}")
         return Trainer(train_step=step_fn, pipeline=pipe, ckpt=mgr,
                        params=params, opt_state=opt,
-                       ckpt_every=args.ckpt_every)
+                       ckpt_every=args.ckpt_every,
+                       straggler_monitor=StragglerMonitor())
 
     result = run_with_restarts(
         make_trainer, args.steps,

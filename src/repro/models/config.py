@@ -172,6 +172,10 @@ class ParallelConfig:
     optimizer_dtype: str = "float32"   # float32 | bfloat16 moments
     grad_sync: str = "allreduce"       # allreduce | gossip | local_sgd
     gossip_order: int | None = None
+    gossip_buckets: int = 1            # flat size-balanced gradient buckets
+    gossip_overlap: bool = False       # pipeline bucket sync w/ backward
+    gossip_payload_dtype: str | None = None  # e.g. "bfloat16" exchanges
+    gossip_truncate: int = 0           # drop last r rounds (staleness)
     mamba_chunk: int = 256
     moe_groups: int = 1                # MoE dispatch groups (= DP shards)
     moe_capacity: float = 0.0          # >0 overrides MoEConfig.capacity_factor

@@ -21,7 +21,7 @@ import time
 from typing import Any, Callable, Iterable
 
 __all__ = ["WorkerFailure", "FailureInjector", "run_with_restarts",
-           "StragglerMonitor"]
+           "StragglerMonitor", "StragglerInjector"]
 
 
 class WorkerFailure(RuntimeError):
@@ -70,6 +70,59 @@ def run_with_restarts(
                 raise
             # In production: re-provision / drop to a smaller mesh here.
             continue
+
+
+@dataclasses.dataclass
+class StragglerInjector:
+    """Injects per-rank interconnect delay into collective rounds.
+
+    A single-host CPU mesh has no real NIC, so the latency side of the
+    alpha-beta communication model is *emulated* while everything else
+    (compute, memcpy bandwidth, schedule order) stays real: the hooks
+    below are handed to ``core.gossip.chebyshev_gossip_mean(round_delay=)``
+    / the all-reduce barrier step, run on every device thread via
+    ``pure_callback``, and ``time.sleep`` for the configured latency.
+    Sleeps on concurrent device threads overlap, exactly like wire latency
+    on independent links — so wall-clock measured under injection ranks
+    schedules the way a real interconnect would (DESIGN.md Sec. 12.5).
+
+    ``alpha_ms``      — per-message launch latency; a gossip round moving
+                        ``n_messages`` neighbour messages from one device
+                        pays ``alpha_ms * n_messages``. This is the term
+                        bucketing amortises (2*n_leaves -> 2*K messages).
+    ``rank_delay_ms`` — extra per-round delay for specific ranks: the
+                        straggler. All-reduce pays it on every one of its
+                        ``2*(P-1)`` sequential phases (global barrier);
+                        truncated gossip only on its ``M - r`` rounds.
+    """
+
+    alpha_ms: float = 0.0
+    rank_delay_ms: dict[int, float] | None = None
+
+    def __post_init__(self):
+        if self.rank_delay_ms is None:
+            self.rank_delay_ms = {}
+        self.rounds_injected = 0
+
+    def _rank_ms(self, rank: int) -> float:
+        return self.rank_delay_ms.get(int(rank), 0.0)
+
+    def gossip_round(self, rank: int, round_k: int, n_messages: int) -> None:
+        """Per-round hook: message launch latency + this rank's slowness."""
+        del round_k
+        ms = self.alpha_ms * n_messages + self._rank_ms(rank)
+        self.rounds_injected += 1
+        if ms > 0.0:
+            time.sleep(ms / 1e3)
+
+    def allreduce_barrier(self, rank: int, n_phases: int) -> None:
+        """Per-step hook for the ring all-reduce reference: the straggler
+        is late on each of the ``n_phases`` sequential phases, and the
+        barrier makes everyone inherit the sum."""
+        ms = (self.alpha_ms + self._rank_ms(rank)) * n_phases
+        self.rounds_injected += 1
+        if ms > 0.0:
+            time.sleep(ms / 1e3)
 
 
 @dataclasses.dataclass

@@ -278,7 +278,12 @@ class AsyncGraphFilterEngine:
         panel, k, b = self._pack(batch)
         prog = self.cache.get(
             ("apply", self.backend, panel.shape[0], b),
-            lambda: self.filt.panel_program(backend=self.backend, **self.opts),
+            # The packed panel is built fresh per batch and dead after the
+            # call, so its device buffer is donated (launch.donation
+            # discipline): the apply lane allocates no net panel memory at
+            # steady state. Pinned by test_engine donation tests.
+            lambda: self.filt.panel_program(
+                backend=self.backend, donate=True, **self.opts),
         )
         out = np.asarray(prog(jnp.asarray(panel)))  # (eta, N, b)
         self.applies += 1
@@ -332,7 +337,10 @@ class AsyncGraphFilterEngine:
                 n_iters=spec.n_iters,
                 backend=be,
                 **spec.opts,
-            )
+            ),
+            # Same donation discipline as the apply lane: the packed panel
+            # is dead after the call, so the solve reuses its buffer.
+            donate_argnums=(0,),
         )
         problem = LassoProblem(filt=spec.filt, y=np.zeros((n,), np.float32), mu=spec.mu)
         mpi = problem.messages_per_iteration(be, **spec.opts)

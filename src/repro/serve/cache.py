@@ -6,6 +6,13 @@ panel widths settles onto a logarithmic number of programs: every bucket
 compiles exactly once (its cache *miss*), and steady-state traffic is
 all *hits* — the recompile counter the load harness and the acceptance
 tests read is simply ``misses``.
+
+Cached programs are built with the panel input buffer *donated*
+(``GraphFilter.panel_program(donate=True)`` / the solve-lane
+``donate_argnums``, see ``launch.donation``): the engine packs a fresh
+panel per batch and never reads it back, so at steady state a lane is
+allocation-stable — cached program + recycled panel buffer, no per-batch
+net device allocation.
 """
 
 from __future__ import annotations

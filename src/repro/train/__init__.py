@@ -1,6 +1,11 @@
-from repro.train.trainer import (Trainer, make_gossip_train_step,
+from repro.train.buckets import (BucketPlan, build_bucket_plan,
+                                 pack_buckets, unpack_buckets)
+from repro.train.trainer import (Trainer, make_barrier_train_step,
+                                 make_gossip_train_step,
                                  make_local_sgd_train_step,
                                  make_train_step)
 
-__all__ = ["Trainer", "make_gossip_train_step",
-           "make_local_sgd_train_step", "make_train_step"]
+__all__ = ["Trainer", "make_barrier_train_step", "make_gossip_train_step",
+           "make_local_sgd_train_step", "make_train_step",
+           "BucketPlan", "build_bucket_plan", "pack_buckets",
+           "unpack_buckets"]

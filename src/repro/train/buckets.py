@@ -1,0 +1,118 @@
+"""Size-balanced gradient buckets for pipelined gossip sync.
+
+The per-leaf gossip schedule moves ``2 * n_leaves`` neighbour messages per
+Chebyshev round — for an LM gradient tree that is dozens of tiny layer-norm
+vectors next to a handful of matmul blocks, so the per-message launch/latency
+cost (the alpha term of the alpha-beta interconnect model) dominates the
+round.  A :class:`BucketPlan` packs the leaves into K flat, size-balanced
+f32 buffers so each round moves ``2 * K`` large messages instead, and the
+per-bucket recurrences are independent chains the scheduler can pipeline
+against the backward pass (DESIGN.md Sec. 12.2).
+
+Greedy longest-processing-time assignment (leaves sorted by size, each to
+the currently-lightest bucket) keeps the buckets within one max-leaf of
+balanced — adequate here since the point is message *aggregation*, not
+perfect load balance.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["BucketPlan", "build_bucket_plan", "pack_buckets",
+           "unpack_buckets"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketPlan:
+    """Static description of a leaf -> bucket packing.
+
+    ``buckets[b]`` lists flat-leaf indices in pack order; ``sizes[b]`` is
+    the bucket's total element count. The plan is built once from abstract
+    shapes and closed over by the jitted step — nothing here is traced.
+    """
+
+    treedef: Any
+    shapes: tuple[tuple[int, ...], ...]
+    dtypes: tuple[Any, ...]
+    buckets: tuple[tuple[int, ...], ...]
+    sizes: tuple[int, ...]
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.buckets)
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.shapes)
+
+    @property
+    def n_params(self) -> int:
+        return sum(self.sizes)
+
+    def imbalance(self) -> float:
+        """max bucket size / mean bucket size (1.0 = perfectly balanced)."""
+        if not self.sizes:
+            return 1.0
+        return max(self.sizes) / (sum(self.sizes) / len(self.sizes))
+
+
+def build_bucket_plan(tree: Any, n_buckets: int) -> BucketPlan:
+    """Greedy size-balanced partition of ``tree``'s leaves into
+    ``n_buckets`` buckets.
+
+    ``tree`` may hold concrete arrays or ``ShapeDtypeStruct``s — only
+    shapes are consulted. Buckets never split a leaf; if there are fewer
+    leaves than requested buckets the plan degrades to one leaf per
+    bucket.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    if n_buckets < 1:
+        raise ValueError(f"n_buckets={n_buckets} must be >= 1")
+    n_buckets = min(n_buckets, len(leaves))
+    order = sorted(range(len(leaves)), key=lambda i: -leaves[i].size)
+    assignment: list[list[int]] = [[] for _ in range(n_buckets)]
+    fill = [0] * n_buckets
+    for i in order:
+        b = fill.index(min(fill))
+        assignment[b].append(i)
+        fill[b] += leaves[i].size
+    return BucketPlan(
+        treedef=treedef,
+        shapes=tuple(tuple(lf.shape) for lf in leaves),
+        dtypes=tuple(lf.dtype for lf in leaves),
+        buckets=tuple(tuple(b) for b in assignment),
+        sizes=tuple(fill),
+    )
+
+
+def pack_buckets(plan: BucketPlan, tree: Any) -> list[jnp.ndarray]:
+    """Flatten ``tree`` into ``plan.n_buckets`` contiguous f32 vectors."""
+    leaves = jax.tree_util.tree_leaves(tree)
+    if len(leaves) != plan.n_leaves:
+        raise ValueError(
+            f"tree has {len(leaves)} leaves, plan expects {plan.n_leaves}")
+    return [
+        jnp.concatenate(
+            [leaves[i].astype(jnp.float32).reshape(-1) for i in idxs])
+        for idxs in plan.buckets
+    ]
+
+
+def unpack_buckets(plan: BucketPlan, flats: list[jnp.ndarray]) -> Any:
+    """Inverse of :func:`pack_buckets` (restores shapes and dtypes)."""
+    out: list[Any] = [None] * plan.n_leaves
+    for idxs, flat in zip(plan.buckets, flats):
+        off = 0
+        for i in idxs:
+            shape = plan.shapes[i]
+            n = 1
+            for s in shape:
+                n *= s
+            out[i] = flat[off:off + n].reshape(shape).astype(plan.dtypes[i])
+            off += n
+    return jax.tree_util.tree_unflatten(plan.treedef, out)

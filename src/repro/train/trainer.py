@@ -32,8 +32,10 @@ from repro.models import lm
 from repro.models.config import ModelConfig, ParallelConfig
 from repro.optim import adamw_update, AdamWConfig
 from repro.models.sharding import ShardingRules
+from repro.train.buckets import build_bucket_plan, pack_buckets, unpack_buckets
 
-__all__ = ["make_train_step", "make_gossip_train_step", "Trainer"]
+__all__ = ["make_train_step", "make_gossip_train_step",
+           "make_barrier_train_step", "Trainer"]
 
 
 def _accumulate_grads(loss_fn, params, batch, n_micro: int):
@@ -67,6 +69,66 @@ def _accumulate_grads(loss_fn, params, batch, n_micro: int):
     return loss, {"ce": loss}, grads
 
 
+def _accumulate_grads_overlap(loss_fn, params, batch, n_micro: int, sync):
+    """Grad accumulation with the gossip *delay-slot* schedule: the scan
+    body for microbatch ``m`` dispatches the consensus sync of microbatch
+    ``m-1``'s raw gradients — a chain with no data dependence on the
+    current backward, so the compiler is free to fly its neighbour
+    exchanges while backward ``m`` computes; the last microbatch's sync is
+    the epilogue (DESIGN.md Sec. 12.3).
+
+    Exactness: gossip is linear, so mean_m sync(g_m) == sync(mean_m g_m) up
+    to f32 re-association — parity with the post-backward schedule is
+    pinned by tests. The price is words: every microbatch's partial
+    gradient is exchanged, ``n_micro`` x the words of one post-backward
+    sync. That is the same bytes-for-latency trade the gossip collective
+    itself makes vs all-reduce (DESIGN.md Sec. 2), and the reason the
+    ``microbatches == 1`` bucket pipeline is the default benchmark config.
+
+    ``sync(tree, salt)`` must accept a loop-variant salt so emulated-delay
+    callbacks cannot be hoisted out of the scan.
+    """
+    if n_micro == 1:
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch)
+        return loss, metrics, sync(grads, jnp.int32(0))
+
+    def split(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    mbs = jax.tree.map(split, batch)
+    mb0 = jax.tree.map(lambda x: x[0], mbs)
+    rest = jax.tree.map(lambda x: x[1:], mbs)
+
+    def grads_of(mb):
+        (loss, _), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        return loss, jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+    loss0, g0 = grads_of(mb0)
+    zero_acc = jax.tree.map(lambda g: jnp.zeros_like(g), g0)
+
+    def body(carry, mb_m):
+        loss_acc, synced_acc, g_prev = carry
+        mb, m = mb_m
+        loss, g_cur = grads_of(mb)
+        # Delay slot: sync the previous microbatch's grads; independent of
+        # this microbatch's backward, hence overlappable.
+        g_prev = sync(g_prev, m)
+        synced_acc = jax.tree.map(lambda a, g: a + g, synced_acc, g_prev)
+        return (loss_acc + loss, synced_acc, g_cur), None
+
+    (loss_sum, synced, g_last), _ = jax.lax.scan(
+        body, (loss0, zero_acc, g0),
+        (rest, jnp.arange(1, n_micro, dtype=jnp.int32)))
+    synced = jax.tree.map(
+        lambda a, g: a + g, synced, sync(g_last, jnp.int32(n_micro)))
+    grads = jax.tree.map(
+        lambda g, p: (g / n_micro).astype(p.dtype), synced, params)
+    loss = loss_sum / n_micro
+    return loss, {"ce": loss}, grads
+
+
 def make_train_step(
     cfg: ModelConfig,
     par: ParallelConfig,
@@ -96,6 +158,7 @@ def make_gossip_train_step(
     rules: ShardingRules | None,
     mesh: Mesh,
     data_axis: str = "data",
+    round_delay: Callable | None = None,
 ) -> Callable:
     """Decentralized-DP train step with Chebyshev-gossip gradient sync.
 
@@ -105,6 +168,26 @@ def make_gossip_train_step(
     Each replica's parameters may drift by the consensus tolerance;
     ``resync_every`` steps of exact pmean bound the drift (local-SGD
     flavour).
+
+    Schedule knobs (``ParallelConfig``, DESIGN.md Sec. 12):
+
+    * ``gossip_buckets=K > 1`` packs the gradient tree into K flat
+      size-balanced buckets (``train.buckets``); each round then moves
+      ``2*K`` large neighbour messages instead of ``2*n_leaves`` small
+      ones, amortising per-message launch latency, and the K recurrences
+      are independent chains the scheduler can pipeline.
+    * ``gossip_overlap=True`` with ``microbatches > 1`` switches to the
+      delay-slot schedule (:func:`_accumulate_grads_overlap`): microbatch
+      ``m``'s backward overlaps microbatch ``m-1``'s gossip. With
+      ``microbatches == 1`` the bucket pipeline *is* the overlap schedule
+      (post-backward, K concurrent chains).
+    * ``gossip_payload_dtype`` / ``gossip_truncate`` — bf16 exchanges and
+      bounded-staleness round truncation, forwarded to
+      :func:`repro.core.gossip.chebyshev_gossip_mean`.
+
+    ``round_delay`` is the emulated-interconnect hook
+    (``runtime.fault.StragglerInjector.gossip_round``) used by the
+    benchmark harness; None for production.
     """
     d = mesh.shape[data_axis]
     order = par.gossip_order or gossip.required_order(d, 1e-3)
@@ -113,11 +196,102 @@ def make_gossip_train_step(
         loss, _ = lm.loss_fn(p, b, cfg, par, rules)
         return loss, {}
 
+    def sync_leaves(tree, salt):
+        """Status-quo schedule: one per-leaf gossip over the whole tree."""
+        return gossip.chebyshev_gossip_mean(
+            tree, data_axis, d, order=order,
+            payload_dtype=par.gossip_payload_dtype,
+            truncate=par.gossip_truncate,
+            round_delay=round_delay, delay_salt=salt)
+
+    def sync_bucketed(tree, salt):
+        """Bucketed pipeline: K flat independent recurrence chains.
+
+        The emulated-latency hook rides on chain 0 only, reporting the
+        round's *aggregate* send count (``2 K``): per-message launch cost
+        is charged once per round, so schedule comparisons are not skewed
+        by the host-callback overhead itself (see
+        ``chebyshev_gossip_mean``'s ``delay_messages``).
+        """
+        plan = build_bucket_plan(tree, par.gossip_buckets)
+        flats = pack_buckets(plan, tree)
+        outs = [
+            gossip.chebyshev_gossip_mean(
+                f, data_axis, d, order=order,
+                payload_dtype=par.gossip_payload_dtype,
+                truncate=par.gossip_truncate,
+                round_delay=round_delay if b == 0 else None,
+                delay_salt=salt,
+                delay_messages=2 * len(flats))
+            for b, f in enumerate(flats)
+        ]
+        return unpack_buckets(plan, outs)
+
+    sync = sync_bucketed if par.gossip_buckets > 1 else sync_leaves
+
+    def local_step(params, opt_state, batch):
+        if par.gossip_overlap:
+            loss, _, grads = _accumulate_grads_overlap(
+                loss_fn, params, batch, par.microbatches, sync)
+        else:
+            loss, _, grads = _accumulate_grads(
+                loss_fn, params, batch, par.microbatches)
+            grads = sync(grads, jnp.int32(0))
+        params, opt_state, om = adamw_update(params, grads, opt_state, optc)
+        loss = jax.lax.pmean(loss, data_axis)
+        return params, opt_state, {"loss": loss, **om}
+
+    return shard_map(
+        local_step,
+        mesh=mesh,
+        in_specs=(P(), P(), P(data_axis)),
+        out_specs=(P(), P(), P()),
+        axis_names={data_axis},
+        check_vma=False,
+    )
+
+
+def make_barrier_train_step(
+    cfg: ModelConfig,
+    par: ParallelConfig,
+    optc: AdamWConfig,
+    rules: ShardingRules | None,
+    mesh: Mesh,
+    data_axis: str = "data",
+    barrier_delay: Callable | None = None,
+) -> Callable:
+    """All-reduce reference step on the same ``shard_map`` footing as the
+    gossip step (params replicated, grads pmean'd) so step-time and
+    loss-curve comparisons isolate the *collective*, not the sharding
+    style.
+
+    ``barrier_delay(rank, n_phases)`` emulates the straggler cost of the
+    global barrier: a ring all-reduce is ``2*(P-1)`` sequential phases and
+    a rank that is late every phase stalls all of them
+    (``runtime.fault.StragglerInjector.allreduce_barrier``).
+    """
+    d = mesh.shape[data_axis]
+    n_phases = 2 * (d - 1)
+
+    def loss_fn(p, b):
+        loss, _ = lm.loss_fn(p, b, cfg, par, rules)
+        return loss, {}
+
     def local_step(params, opt_state, batch):
         loss, _, grads = _accumulate_grads(
             loss_fn, params, batch, par.microbatches)
-        grads = gossip.chebyshev_gossip_mean(
-            grads, data_axis, d, order=order)
+        if barrier_delay is not None:
+            rank = jax.lax.axis_index(data_axis)
+
+            def _cb(r):
+                barrier_delay(int(r), n_phases)
+                return jnp.float32(0.0)
+
+            tok = jax.pure_callback(
+                _cb, jax.ShapeDtypeStruct((), jnp.float32), rank)
+            grads = jax.tree.map(lambda g: g + tok.astype(g.dtype), grads)
+        grads = jax.tree.map(
+            lambda g: jax.lax.pmean(g, data_axis), grads)
         params, opt_state, om = adamw_update(params, grads, opt_state, optc)
         loss = jax.lax.pmean(loss, data_axis)
         return params, opt_state, {"loss": loss, **om}
@@ -187,27 +361,37 @@ class Trainer:
     opt_state: Any
     ckpt_every: int = 50
     failure_injector: Callable[[int], None] | None = None
+    straggler_monitor: Any = None      # runtime.fault.StragglerMonitor
 
     def run(self, n_steps: int, start_step: int = 0) -> dict:
         step = start_step
         metrics = {}
         losses = []
+        step_s = []
         t0 = time.monotonic()
         while step < n_steps:
             if self.failure_injector is not None:
                 self.failure_injector(step)  # may raise WorkerFailure
             batch = self.pipeline.batch_at(step)
+            ts = time.monotonic()
             self.params, self.opt_state, metrics = self.train_step(
                 self.params, self.opt_state, batch)
-            losses.append(float(metrics["loss"]))
+            losses.append(float(metrics["loss"]))  # blocks on the step
+            step_s.append(time.monotonic() - ts)
+            if self.straggler_monitor is not None:
+                self.straggler_monitor.tick(step)
             step += 1
             if step % self.ckpt_every == 0 or step == n_steps:
                 self.ckpt.save_async(
                     step, {"params": self.params, "opt": self.opt_state})
         self.ckpt.wait()
-        return {
+        out = {
             "final_step": step,
             "losses": losses,
+            "step_s": step_s,
             "wall_s": time.monotonic() - t0,
             **{k: float(v) for k, v in metrics.items()},
         }
+        if self.straggler_monitor is not None:
+            out["straggler_flagged"] = list(self.straggler_monitor.flagged)
+        return out

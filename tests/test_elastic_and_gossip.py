@@ -157,6 +157,155 @@ def test_local_sgd_training_converges():
     assert "OK" in _run(LOCAL_SGD_SCRIPT)
 
 
+SCHEDULE_PARITY_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import compat, gossip
+from repro.configs import registry
+from repro.data import SyntheticTokenPipeline
+from repro.launch.donation import jit_train_step
+from repro.models import lm
+from repro.models.config import ParallelConfig
+from repro.optim import AdamWConfig, init_opt_state
+from repro.runtime.fault import StragglerInjector
+from repro.train import make_gossip_train_step
+
+mesh = compat.make_mesh((8,), ("data",))
+cfg = registry.get_smoke("codeqwen15_7b")
+optc = AdamWConfig(peak_lr=4e-3, warmup_steps=2, total_steps=40)
+pipe = SyntheticTokenPipeline(cfg.vocab_size, seq_len=32, global_batch=16)
+ORDER = 12
+
+def par(**kw):
+    base = dict(attn_impl="naive", remat="none", grad_sync="gossip",
+                gossip_order=ORDER, fsdp=False)
+    base.update(kw)
+    return ParallelConfig(**base)
+
+def run(par_cfg, steps=12, round_delay=None, donate=True):
+    step = jit_train_step(
+        make_gossip_train_step(cfg, par_cfg, optc, None, mesh,
+                               round_delay=round_delay),
+        donate=donate)
+    params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params, optc)
+    losses = []
+    for s in range(steps):
+        params, opt, m = step(params, opt, pipe.batch_at(s))
+        losses.append(float(m["loss"]))
+    return np.asarray(losses)
+
+serial = run(par(gossip_buckets=1, gossip_overlap=False))
+bucketed = run(par(gossip_buckets=4, gossip_overlap=True))
+bf16 = run(par(gossip_buckets=4, gossip_overlap=True,
+               gossip_payload_dtype="bfloat16"))
+trunc = run(par(gossip_buckets=4, gossip_overlap=True, gossip_truncate=4))
+
+# Bucketing is a pure repacking: bitwise-equal training trajectory.
+assert np.max(np.abs(bucketed - serial)) < 1e-5, (serial, bucketed)
+# bf16 payloads stay inside the documented roundoff envelope.
+bound = gossip.payload_roundoff_bound(ORDER)
+assert np.max(np.abs(bf16 - serial)) < max(0.02, bound), (serial, bf16)
+# Truncated rounds bias the mean (documented profile) but still train.
+assert trunc[-1] < trunc[0] - 0.05, trunc
+assert np.max(np.abs(trunc - serial)) < 0.1, (serial, trunc)
+
+# Delay-slot schedule (microbatches=2) == serial accumulation, by
+# linearity of the gossip polynomial.
+serial_mb2 = run(par(gossip_buckets=4, gossip_overlap=False,
+                     microbatches=2), steps=6)
+delay_slot = run(par(gossip_buckets=4, gossip_overlap=True,
+                     microbatches=2), steps=6)
+assert np.max(np.abs(delay_slot - serial_mb2)) < 1e-5, (
+    serial_mb2, delay_slot)
+
+# The emulated-delay callback fires once per device per recurrence round
+# (LICM must not hoist it out of the scan): 8 ranks x ORDER rounds/step.
+inj = StragglerInjector(alpha_ms=0.0)
+run(par(gossip_buckets=4, gossip_overlap=True), steps=2,
+    round_delay=inj.gossip_round)
+assert inj.rounds_injected == 2 * 8 * ORDER, inj.rounds_injected
+
+# Executed-schedule words (traced ppermutes): bucketing moves the same
+# payload as the per-leaf schedule; bf16 payloads halve it.
+params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+opt = init_opt_state(params, optc)
+batch = pipe.batch_at(0)
+def words(par_cfg):
+    step = make_gossip_train_step(cfg, par_cfg, optc, None, mesh)
+    return gossip.measured_ppermute_words(step, params, opt, batch)
+w_serial = words(par(gossip_buckets=1, gossip_overlap=False))
+w_bucket = words(par(gossip_buckets=4, gossip_overlap=True))
+w_bf16 = words(par(gossip_buckets=4, gossip_overlap=True,
+                   gossip_payload_dtype="bfloat16"))
+n_params = sum(x.size for x in jax.tree.leaves(params))
+assert w_serial == gossip.gossip_message_words(ORDER, 8, n_params) // 8
+assert w_bucket == w_serial, (w_bucket, w_serial)
+assert abs(w_bf16 - w_serial / 2) <= 1, (w_bf16, w_serial)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_gossip_schedule_parity_and_error_models():
+    assert "OK" in _run(SCHEDULE_PARITY_SCRIPT)
+
+
+RESTART_GOSSIP_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax, tempfile
+from repro.core import compat
+from repro.checkpoint import CheckpointManager, latest_step, restore
+from repro.configs import registry
+from repro.data import SyntheticTokenPipeline
+from repro.launch.donation import jit_train_step
+from repro.models import lm
+from repro.models.config import ParallelConfig
+from repro.optim import AdamWConfig, init_opt_state
+from repro.runtime import run_with_restarts
+from repro.runtime.fault import FailureInjector
+from repro.train import Trainer, make_gossip_train_step
+
+mesh = compat.make_mesh((8,), ("data",))
+cfg = registry.get_smoke("codeqwen15_7b")
+optc = AdamWConfig(peak_lr=4e-3, warmup_steps=2, total_steps=40)
+pipe = SyntheticTokenPipeline(cfg.vocab_size, seq_len=32, global_batch=8)
+par = ParallelConfig(attn_impl="naive", remat="none", grad_sync="gossip",
+                     gossip_order=12, gossip_buckets=4,
+                     gossip_overlap=True, fsdp=False)
+ckpt_dir = tempfile.mkdtemp()
+mgr = CheckpointManager(ckpt_dir, keep=3)
+step_fn = jit_train_step(make_gossip_train_step(cfg, par, optc, None, mesh))
+inj = FailureInjector(fail_at_steps=(6,))
+
+def make_trainer(start_step):
+    params, _ = lm.init(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params, optc)
+    if start_step > 0:
+        snap = restore(ckpt_dir, start_step, {"params": params, "opt": opt})
+        params, opt = snap["params"], snap["opt"]
+    return Trainer(train_step=step_fn, pipeline=pipe, ckpt=mgr,
+                   params=params, opt_state=opt, ckpt_every=4,
+                   failure_injector=inj)
+
+result = run_with_restarts(
+    make_trainer, 10, latest_step_fn=lambda: latest_step(ckpt_dir))
+# Node loss at step 6 -> one restart from the step-4 checkpoint, training
+# (donated buffers and all) runs through to completion.
+assert result["restarts"] == 1, result["restarts"]
+assert result["final_step"] == 10, result["final_step"]
+assert len(result["losses"]) == 6, result["losses"]  # steps 4..9 rerun
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_gossip_training_restarts_after_node_loss():
+    assert "OK" in _run(RESTART_GOSSIP_SCRIPT)
+
+
 def test_straggler_monitor_flags_outliers():
     import time as _time
     from repro.runtime import StragglerMonitor

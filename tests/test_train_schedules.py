@@ -1,0 +1,208 @@
+"""Fast (single-device) tests for the decentralized-training machinery:
+gradient bucket plans, the truncation/bf16 error models of the gossip
+collective, the emulated-interconnect injector, and the buffer-donation
+discipline (train step + panel lane). The multi-device schedule-parity
+and convergence tests live in test_elastic_and_gossip.py."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import chebyshev, gossip, graph, multipliers
+from repro.filters import GraphFilter
+from repro.launch.donation import (
+    DECODE_DONATE, PREFILL_DONATE, TRAIN_DONATE, jit_train_step)
+from repro.runtime.fault import StragglerInjector
+from repro.train import build_bucket_plan, pack_buckets, unpack_buckets
+
+
+def _tree():
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 4)
+    return {
+        "emb": jax.random.normal(ks[0], (32, 8)),
+        "w": {"a": jax.random.normal(ks[1], (16, 16)).astype(jnp.bfloat16),
+              "b": jax.random.normal(ks[2], (7,))},
+        "bias": jax.random.normal(ks[3], (3, 2)),
+    }
+
+
+# ---------------------------------------------------------- buckets ----
+
+
+def test_bucket_plan_partitions_leaves():
+    tree = _tree()
+    n_leaves = len(jax.tree.leaves(tree))
+    plan = build_bucket_plan(tree, 3)
+    assert plan.n_buckets == 3
+    covered = sorted(i for b in plan.buckets for i in b)
+    assert covered == list(range(n_leaves))
+    assert plan.n_params == sum(x.size for x in jax.tree.leaves(tree))
+    assert sum(plan.sizes) == plan.n_params
+
+
+def test_bucket_plan_balance_and_clamp():
+    tree = _tree()
+    plan = build_bucket_plan(tree, 2)
+    # Greedy LPT on this tree keeps the heaviest bucket under 2x the mean.
+    assert plan.imbalance() < 2.0
+    # More buckets than leaves clamps to one leaf per bucket.
+    plan = build_bucket_plan(tree, 99)
+    assert plan.n_buckets == len(jax.tree.leaves(tree))
+    with pytest.raises(ValueError):
+        build_bucket_plan(tree, 0)
+
+
+def test_pack_unpack_roundtrip_mixed_dtypes():
+    tree = _tree()
+    plan = build_bucket_plan(tree, 2)
+    flats = pack_buckets(plan, tree)
+    assert all(f.dtype == jnp.float32 and f.ndim == 1 for f in flats)
+    assert sorted(f.size for f in flats) == sorted(plan.sizes)
+    back = unpack_buckets(plan, flats)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+# ----------------------------------------------- gossip error models ----
+
+
+def _ring_laplacian(p: int) -> np.ndarray:
+    lap = 2.0 * np.eye(p)
+    for i in range(p):
+        lap[i, (i + 1) % p] -= 1.0
+        lap[i, (i - 1) % p] -= 1.0
+    return lap
+
+
+def test_truncation_profile_bounds_concrete_bias():
+    """The (mean_gain, disagreement_gain) profile really bounds the error
+    of the truncated polynomial applied to a concrete vector (checked by
+    eigendecomposition of the ring Laplacian — no devices needed)."""
+    p, order = 8, 12
+    lam1, lmax = gossip.ring_spectrum_bounds(p)
+    lap = _ring_laplacian(p)
+    w, v = np.linalg.eigh(lap)
+    x = np.random.default_rng(0).normal(size=p)
+    mean = np.full(p, x.mean())
+    d = x - mean
+    for trunc in (0, 2, 4):
+        mg, dg = gossip.truncation_profile(order, trunc, lam1, lmax)
+        coeffs = gossip.consensus_coefficients(
+            order, lam1, lmax)[0][: order - trunc + 1]
+        px = v @ (chebyshev.cheb_eval(coeffs, w, lmax) * (v.T @ x))
+        err = np.linalg.norm(px - mean)
+        bound = abs(mg - 1.0) * np.linalg.norm(mean) + dg * np.linalg.norm(d)
+        assert err <= bound * (1.0 + 1e-6), (trunc, err, bound)
+
+
+def test_truncation_profile_degrades_monotonically():
+    p, order = 8, 12
+    lam1, lmax = gossip.ring_spectrum_bounds(p)
+    gains = [gossip.truncation_profile(order, t, lam1, lmax)[1]
+             for t in (0, 2, 4, 6)]
+    assert gains == sorted(gains)
+    # truncate=0 recovers the full-order contraction (up to quadrature).
+    mg0, dg0 = gossip.truncation_profile(order, 0, lam1, lmax)
+    assert abs(mg0 - 1.0) < 1e-6
+    assert dg0 <= 2.0 * gossip.consensus_contraction(order, lam1, lmax)
+    with pytest.raises(ValueError):
+        gossip.truncation_profile(order, order, lam1, lmax)
+
+
+def test_payload_roundoff_bound_scales_with_order():
+    assert gossip.payload_roundoff_bound(12) == pytest.approx(12 * 2.0**-6)
+    assert gossip.payload_roundoff_bound(24) \
+        == 2 * gossip.payload_roundoff_bound(12)
+
+
+# ------------------------------------------------- straggler injector ----
+
+
+def test_straggler_injector_sleeps_and_counts():
+    inj = StragglerInjector(alpha_ms=1.0, rank_delay_ms={0: 5.0})
+    t0 = time.perf_counter()
+    inj.gossip_round(0, 0, 4)          # 4 msgs * 1 ms + 5 ms rank delay
+    dt = time.perf_counter() - t0
+    assert dt >= 0.008
+    t0 = time.perf_counter()
+    inj.gossip_round(3, 0, 4)          # non-straggler rank: alpha only
+    assert time.perf_counter() - t0 < dt
+    inj.allreduce_barrier(0, 14)       # (1 + 5) ms * 14 phases
+    assert inj.rounds_injected == 3
+    # Zero-config injector is a no-op timing-wise.
+    quick = StragglerInjector()
+    t0 = time.perf_counter()
+    quick.gossip_round(0, 0, 100)
+    assert time.perf_counter() - t0 < 0.005
+
+
+# ----------------------------------------------------------- donation ----
+
+
+def test_donation_tables():
+    assert TRAIN_DONATE == (0, 1)
+    assert DECODE_DONATE == (2,)
+    assert PREFILL_DONATE == ()
+
+
+def test_jit_train_step_donates_params_and_opt_state():
+    def step(params, opt_state, batch):
+        new_p = jax.tree.map(lambda x: x + 1.0, params)
+        new_o = jax.tree.map(lambda x: x * 0.9, opt_state)
+        return new_p, new_o, {"loss": jnp.sum(batch)}
+
+    p = {"w": jnp.ones((8, 8))}
+    o = {"m": jnp.zeros((8, 8))}
+    b = jnp.ones((4,))
+    p2, o2, m = jit_train_step(step)(p, o, b)
+    jax.block_until_ready((p2, o2, m))
+    # Donated inputs are consumed even on backends without buffer
+    # aliasing (JAX still deletes them) — the host-side discipline the
+    # Trainer loop relies on.
+    assert p["w"].is_deleted() and o["m"].is_deleted()
+    assert not b.is_deleted()
+
+    p = {"w": jnp.ones((8, 8))}
+    o = {"m": jnp.zeros((8, 8))}
+    jit_train_step(step, donate=False)(p, o, b)
+    assert not p["w"].is_deleted() and not o["m"].is_deleted()
+
+
+def test_panel_lane_allocation_stable():
+    """Steady-state panel lane: donated program + fresh panel per batch
+    leaves the number of live device buffers flat across batches (no
+    per-batch net allocation — the serve-cache discipline). ``is_deleted``
+    can't be asserted here: XLA:CPU cannot alias the (N, F) input into the
+    (eta, N, F) output, and an unusable donation leaves the input alive;
+    the live-array count is the backend-independent observable."""
+    g = graph.connected_sensor_graph(
+        jax.random.PRNGKey(1), n=64, sigma=0.2, kappa=0.21)
+    filt = GraphFilter.from_multipliers(
+        [multipliers.heat(0.5)], order=8, graph=g)
+    rng = np.random.default_rng(0)
+
+    def batch(prog):
+        panel = jnp.asarray(
+            rng.normal(size=(g.n_vertices, 4)), jnp.float32)
+        out = prog(panel)
+        jax.block_until_ready(out)
+        return np.asarray(out)
+
+    prog = filt.panel_program(backend="dense", donate=True)
+    ref = filt.panel_program(backend="dense")
+    fixed = jnp.asarray(rng.normal(size=(g.n_vertices, 4)), jnp.float32)
+    np.testing.assert_allclose(np.asarray(prog(jnp.copy(fixed))),
+                               np.asarray(ref(fixed)),
+                               rtol=1e-5, atol=1e-5)
+    batch(prog)  # warmup: compile + first output buffer
+    level = len(jax.live_arrays())
+    for _ in range(5):
+        batch(prog)
+        assert len(jax.live_arrays()) == level

@@ -157,22 +157,24 @@ def main() -> int:
     baseline = load_rows(baseline_path)
     fresh = load_rows(fresh_path)
     # Key rows: timings above the noise floor, plus every engine_* serving
-    # row, every churn_* row, and every solver_precond_* row — those carry
-    # the north-star throughput / churn-acceptance / PCG-halving claims,
-    # so their *existence* is always enforced; their ratio is only gated
-    # when the baseline timing clears the floor (sub-floor medians are
-    # noise at CI-runner resolution, same as everywhere else).
+    # row, every churn_* row, every solver_precond_* row, and every
+    # gossip_*/train_* decentralized-training row — those carry the
+    # north-star throughput / churn-acceptance / PCG-halving /
+    # gossip-overlap claims, so their *existence* is always enforced;
+    # their ratio is only gated when the baseline timing clears the floor
+    # (sub-floor medians are noise at CI-runner resolution, same as
+    # everywhere else).
+    KEY_PREFIXES = ("engine_", "churn_", "solver_precond_",
+                    "gossip_", "train_")
     key_rows = {
         k: r
         for k, r in baseline.items()
-        if r["median_ms"] >= args.min_ms
-        or k[1].startswith("engine_")
-        or k[1].startswith("churn_")
-        or k[1].startswith("solver_precond_")
+        if r["median_ms"] >= args.min_ms or k[1].startswith(KEY_PREFIXES)
     }
     print(
         f"perf gate: {len(key_rows)} key rows (baseline >= {args.min_ms} ms "
-        f"or engine_*/churn_*/solver_precond_*) of {len(baseline)} baseline rows; "
+        f"or {'/'.join(p + '*' for p in KEY_PREFIXES)}) "
+        f"of {len(baseline)} baseline rows; "
         f"threshold {args.threshold:.2f}x"
     )
 
@@ -214,6 +216,21 @@ def main() -> int:
     new_rows = sorted(set(fresh) - set(baseline))
     if new_rows:
         print(f"  ({len(new_rows)} new rows not in baseline — informational)")
+
+    # Acceptance bits: gossip_*/train_* rows embed their pass/fail claims
+    # (overlap <= 0.8x serial, bf16 halves words, loss parity, straggler
+    # win) as ``accept_<claim>=<0|1>`` in the derived field of the *fresh*
+    # record — a bit at 0 is a correctness/perf claim no longer holding on
+    # this hardware, gated regardless of timings.
+    for (table, op), r in sorted(fresh.items()):
+        if not op.startswith(("gossip_", "train_")):
+            continue
+        for claim, bit in re.findall(r"accept_(\w+)=([01])", r["derived"]):
+            status = "OK" if bit == "1" else "ACCEPT-FAIL"
+            print(f"  [{status:10s}] {op}: accept_{claim}={bit}")
+            if bit != "1":
+                failures.append(f"{table}/{op}: acceptance bit "
+                                f"accept_{claim}=0")
 
     if failures:
         print(f"\nFAIL: {len(failures)} perf regression(s):", file=sys.stderr)

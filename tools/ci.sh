@@ -33,6 +33,7 @@ python -m pip install -r requirements-dev.txt
 # reformatted rather than formatting the whole tree in one noise commit.
 FORMAT_PATHS=(src/repro/stream src/repro/serve src/repro/dynamic
               src/repro/filters src/repro/solvers
+              src/repro/train src/repro/runtime
               benchmarks/loadgen.py tools/bench_check.py)
 if python -m ruff --version >/dev/null 2>&1; then
   python -m ruff check .
@@ -59,6 +60,12 @@ case "$LANE" in
     # to end on a small trace (full-size runs live in the perf-gate job).
     PYTHONPATH=src python -m benchmarks.loadgen --streams 200 --seconds 2 \
       --rate 200
+    # Decentralized-training smoke: 3 steps of the bucketed-gossip
+    # overlap schedule on a forced 8-device mesh (the full parity /
+    # convergence suite is the slow lane; this pins compile + step).
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python examples/train_lm.py --preset tiny --steps 3 \
+      --grad-sync gossip
     # Churn smoke: a small mobile-sensor scenario streamed with per-frame
     # GraphDeltas must stay exact vs a from-scratch dense refilter on the
     # evolved graph (full-scale numbers live in tab_churn / the perf gate).
